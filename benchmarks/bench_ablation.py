@@ -1,0 +1,60 @@
+"""Ablation — each EnGN technique's contribution to end-to-end GCN
+inference (paper-style: start from the naive edge-centric baseline and
+add one technique at a time).
+
+  A  baseline        segment gather/scatter, FAU order, original labels
+  B  +DASR           stage order chosen from (F, H)
+  C  +relabelling    degree-sorted vertices (TPU-DAVC)
+  D  +tiling         blocked RER-SpMM dataflow (dense tiles, skip-empty)
+  E  D + I/O model   adaptive tile schedule (reported as model bytes)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.engn import prepare_graph
+from repro.core.models import make_gnn
+from repro.graphs.degree import (apply_vertex_permutation,
+                                 degree_sort_permutation, permute_features)
+from repro.graphs.generate import make_dataset, random_features
+from repro.graphs.partition import io_cost, tile_schedule_order
+
+HIDDEN = 16
+
+
+def run():
+    for ds in ("cora", "pubmed"):
+        g0, f, _ = make_dataset(ds, max_vertices=6000, max_edges=60000)
+        f = min(f, 1024)
+        x0 = random_features(g0.num_vertices, f, seed=0)
+        perm = degree_sort_permutation(g0)
+        g_re = apply_vertex_permutation(g0, perm)
+        x_re = permute_features(x0, perm)
+
+        def timed(graph, x, backend, order, tag):
+            layer = make_gnn("gcn", f, HIDDEN, backend=backend,
+                             stage_order=order, tile=256)
+            params = layer.init(jax.random.key(0))
+            gd = prepare_graph(graph.gcn_normalized(), layer.cfg)
+            t = time_fn(jax.jit(lambda p, xx: layer.apply(p, gd, xx)),
+                        params, jnp.asarray(x))
+            emit(f"ablation/{ds}/{tag}_us", round(t, 1), "")
+            return t
+
+        ta = timed(g0, x0, "segment", "fau", "A_baseline")
+        tb = timed(g0, x0, "segment", "auto", "B_dasr")
+        tc = timed(g_re, x_re, "segment", "auto", "C_relabel")
+        td = timed(g_re, x_re, "tiled", "auto", "D_tiled")
+        emit(f"ablation/{ds}/speedup_A_to_D", round(ta / td, 2),
+             f"B/A={ta/tb:.2f} C/B={tb/tc:.2f} D/C={tc/td:.2f} "
+             f"(CPU: D loses without an MXU; v5e model in fig10)")
+
+        # E: adaptive schedule I/O (model bytes, Table 3) vs fixed column
+        order = tile_schedule_order(f, HIDDEN)
+        q = 16
+        ra, wa = io_cost(order, q, f, HIDDEN)
+        rc, wc = io_cost("column", q, f, HIDDEN)
+        emit(f"ablation/{ds}/E_adaptive_io_ratio",
+             round((rc + wc) / (ra + wa), 2), f"order={order}")

@@ -1,0 +1,41 @@
+"""Fig. 14 — dimension-aware stage reordering (DASR) speedup over the
+fixed FAU / AFU orders, measured end-to-end on the GCN layer, plus the
+op-count model's prediction."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.dasr import dasr_decide, predicted_speedup
+from repro.core.engn import prepare_graph
+from repro.core.models import make_gnn
+from repro.graphs.generate import make_dataset, random_features
+
+# (dataset, F, H): nell's H=210 > F after hidden, the Reddit-like case
+CASES = [
+    ("cora", 1433, 16),        # F >> H: FAU wins
+    ("nell", 16, 210),         # F << H: AFU wins (fig. 14's Reddit case)
+    ("pubmed", 500, 3),
+]
+
+
+def run():
+    for ds, f, h in CASES:
+        g, _, _ = make_dataset(ds, max_vertices=6000, max_edges=60000)
+        g = g.gcn_normalized()
+        x = jnp.asarray(random_features(g.num_vertices, f, seed=0))
+        times = {}
+        for order in ("fau", "afu", "auto"):
+            layer = make_gnn("gcn", f, h, stage_order=order)
+            params = layer.init(jax.random.key(0))
+            gd = prepare_graph(g, layer.cfg)
+            fn = jax.jit(lambda p, xx: layer.apply(p, gd, xx))
+            times[order] = time_fn(fn, params, x)
+        d = dasr_decide(g.num_vertices, g.num_edges, f, h)
+        emit(f"fig14/{ds}/F{f}_H{h}/dasr_order", d.order,
+             f"pred_speedup_vs_worst="
+             f"{max(d.fau_ops, d.afu_ops)/min(d.fau_ops, d.afu_ops):.2f}")
+        for order in ("fau", "afu", "auto"):
+            emit(f"fig14/{ds}/F{f}_H{h}/{order}_us", round(times[order], 1),
+                 f"speedup_vs_auto={times[order]/times['auto']:.2f}")

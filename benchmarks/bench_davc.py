@@ -1,0 +1,35 @@
+"""Fig. 16 — degree-aware vertex cache: hit rate vs reserved fraction
+and vs cache size, plus the paper's S3.2 hub-coverage statistic that
+justifies pinning, and the TPU-relabelling benefit it maps to."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.davc import simulate_davc
+from repro.graphs.degree import (apply_vertex_permutation,
+                                 degree_sort_permutation,
+                                 hub_edge_coverage)
+from repro.graphs.format import coo_to_blocked
+from repro.graphs.generate import make_dataset
+
+
+def run():
+    for ds in ("cora", "pubmed", "am"):
+        g, _, _ = make_dataset(ds, max_vertices=6000, max_edges=60000)
+        emit(f"fig16/{ds}/hub20_edge_coverage",
+             round(hub_edge_coverage(g, 0.2), 3), "paper: 50-85%")
+        # (a) hit rate vs reserved fraction at 256 lines
+        for frac in (0.0, 0.25, 0.5, 0.75, 1.0):
+            hr = simulate_davc(g, 256, frac)
+            emit(f"fig16a/{ds}/reserved_{frac}", round(hr, 4), "")
+        # (b) hit rate vs cache size, all reserved
+        for lines in (64, 256, 1024):
+            hr = simulate_davc(g, lines, 1.0)
+            emit(f"fig16b/{ds}/lines_{lines}", round(hr, 4), "")
+        # TPU analogue: relabelling densifies the leading tiles
+        b0 = coo_to_blocked(g, 256)
+        b1 = coo_to_blocked(
+            apply_vertex_permutation(g, degree_sort_permutation(g)), 256)
+        emit(f"fig16/{ds}/block_util_orig", round(b0.block_utilization(), 4),
+             f"density={b0.density():.4f}")
+        emit(f"fig16/{ds}/block_util_reorg", round(b1.block_utilization(), 4),
+             f"density={b1.density():.4f}")

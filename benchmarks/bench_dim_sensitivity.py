@@ -1,0 +1,48 @@
+"""Fig. 13 — sensitivity to vertex-property dimension.
+
+The GPA dataflow claim: EnGN's utilisation is flat in F because the
+feature dimension is a grid axis, not a hardware constant.  We measure
+tiled-SpMM throughput (edges/s) across F = 64..1024 — flat means
+dimension-insensitive — and contrast with the gather+segment_sum path
+whose efficiency swings with F (the CPU/GPU behaviour of Fig. 13)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.engn import segment_aggregate
+from repro.graphs.format import coo_to_blocked
+from repro.graphs.generate import rmat_graph, random_features
+from repro.kernels.rer_spmm import ops as spmm_ops
+
+DIMS = [64, 128, 256, 512, 1024]
+
+
+def run():
+    g = rmat_graph(4096, 40000, seed=0)
+    b = coo_to_blocked(g.gcn_normalized(), 128)
+    blocks, brow, bcol = spmm_ops.prepare_blocks(
+        b.blocks, b.block_row, b.block_col, b.q)
+    blocks, brow, bcol = (jnp.asarray(blocks), jnp.asarray(brow),
+                          jnp.asarray(bcol))
+    src, dst = jnp.asarray(g.src), jnp.asarray(g.dst)
+
+    base_tiled = base_seg = None
+    for f in DIMS:
+        x = jnp.asarray(random_features(b.padded_vertices, f, seed=1))
+        t_tiled = time_fn(lambda bl, br, bc, xx: spmm_ops.blocked_spmm(
+            bl, br, bc, xx, q=b.q, op="sum", feature_chunk=min(f, 256)),
+            blocks, brow, bcol, x)
+        t_seg = time_fn(jax.jit(lambda xx: segment_aggregate(
+            xx[src], dst, g.num_vertices, "sum")), x[: g.num_vertices])
+        # edges/s per feature element: flat == dimension-insensitive
+        eps_tiled = g.num_edges * f / t_tiled
+        eps_seg = g.num_edges * f / t_seg
+        if base_tiled is None:
+            base_tiled, base_seg = eps_tiled, eps_seg
+        emit(f"fig13/tiled/F{f}/edge_el_per_us", round(eps_tiled, 1),
+             f"rel={eps_tiled / base_tiled:.2f}")
+        emit(f"fig13/segment/F{f}/edge_el_per_us", round(eps_seg, 1),
+             f"rel={eps_seg / base_seg:.2f}")

@@ -1,0 +1,65 @@
+"""Fig. 17 — scalability over compute-array size.
+
+ASIC: throughput vs PE-array rows/cols.  TPU analogues:
+  (a) tile size T (rows of the array == vertices per tile) — blocked
+      SpMM time vs T at fixed graph;
+  (b) ring width P (pod-level RER): devices in the rotation, via a
+      subprocess with forced host devices — wall time of the sharded
+      ring aggregate vs P."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.graphs.format import coo_to_blocked
+from repro.graphs.generate import rmat_graph, random_features
+from repro.kernels.rer_spmm import ops as spmm_ops
+
+_RING = textwrap.dedent("""
+    import os, time, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core.dataflow import make_ring_aggregate, shard_adjacency_for_ring
+    n, f = 1024, 64
+    rng = np.random.default_rng(0)
+    a = (rng.random((n, n)) < 0.05).astype(np.float32)
+    x = rng.standard_normal((n, f)).astype(np.float32)
+    for p in (1, 2, 4, 8):
+        mesh = jax.make_mesh((p,), ("ring",))
+        blocks = jnp.asarray(shard_adjacency_for_ring(a, p))
+        fn = jax.jit(make_ring_aggregate(mesh, "ring"))
+        y = jax.block_until_ready(fn(blocks, jnp.asarray(x)))
+        t0 = time.perf_counter();
+        for _ in range(5): y = jax.block_until_ready(fn(blocks, jnp.asarray(x)))
+        t = (time.perf_counter() - t0) / 5 * 1e6
+        print(f"RING,{p},{t:.1f}")
+""")
+
+
+def run():
+    g = rmat_graph(4096, 60000, seed=0).gcn_normalized()
+    x = None
+    for t in (64, 128, 256, 512):
+        b = coo_to_blocked(g, t)
+        xp = jnp.asarray(random_features(b.padded_vertices, 64, seed=0))
+        blocks, brow, bcol = spmm_ops.prepare_blocks(
+            b.blocks, b.block_row, b.block_col, b.q)
+        us = time_fn(lambda bl, br, bc, xx: spmm_ops.blocked_spmm(
+            bl, br, bc, xx, q=b.q, op="sum", feature_chunk=64),
+            jnp.asarray(blocks), jnp.asarray(brow), jnp.asarray(bcol), xp)
+        emit(f"fig17a/tile_{t}/spmm_us", round(us, 1),
+             f"nnzb={b.nnzb} density={b.density():.3f}")
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", _RING], env=env,
+                       capture_output=True, text=True, timeout=600)
+    for line in r.stdout.splitlines():
+        if line.startswith("RING,"):
+            _, p, us = line.split(",")
+            emit(f"fig17b/ring_devices_{p}/us", us, "")

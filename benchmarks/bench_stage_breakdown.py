@@ -1,0 +1,70 @@
+"""Fig. 2 — execution-time breakdown of the three EnGN stages
+(feature extraction / aggregate / update) per GNN model."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.engn import segment_aggregate
+from repro.core.models import make_gnn
+from repro.graphs.generate import make_dataset, random_features
+
+DATASETS = ["cora", "pubmed", "corafull", "reddit"]
+MODELS = ["gcn", "gs_pool", "gated_gcn", "grn"]
+HIDDEN = 16
+
+
+def run():
+    for ds in DATASETS:
+        g, f, labels = make_dataset(ds, max_vertices=8000, max_edges=60000)
+        f = min(f, 512)
+        x = jnp.asarray(random_features(g.num_vertices, f, seed=0))
+        src, dst = jnp.asarray(g.src), jnp.asarray(g.dst)
+        for model in MODELS:
+            h = f if model == "grn" else HIDDEN
+            layer = make_gnn(model, f, h)
+            params = layer.init(jax.random.key(0))
+
+            if model == "gcn":
+                extract = jax.jit(lambda p, x: x @ p["w"])
+            elif model == "gs_pool":
+                extract = jax.jit(lambda p, x: jax.nn.relu(
+                    x @ p["w_pool"] + p["b_pool"]))
+            elif model == "gated_gcn":
+                extract = jax.jit(lambda p, x: jax.nn.sigmoid(
+                    (x @ p["w_h"])[dst] + (x @ p["w_c"])[src]) * x[src])
+            else:
+                extract = jax.jit(lambda p, x: x @ p["w"])
+            t_ext = time_fn(extract, params, x)
+
+            feat = extract(params, x)
+            op = "max" if model == "gs_pool" else "sum"
+            if feat.shape[0] == g.num_vertices:      # per-vertex features
+                agg_in = feat[src]
+            else:                                    # per-edge (gated)
+                agg_in = feat
+            agg = jax.jit(lambda v: segment_aggregate(
+                v, dst, g.num_vertices, op))
+            t_agg = time_fn(agg, agg_in)
+
+            a = agg(agg_in)
+            if model == "gs_pool":
+                update = jax.jit(lambda p, a, x: jax.nn.relu(
+                    jnp.concatenate([a, x], 1) @ p["w"]))
+                t_upd = time_fn(update, params, a, x)
+            elif model == "grn":
+                update = jax.jit(lambda p, a, x: layer.update(p, x, a))
+                t_upd = time_fn(update, params, a, x)
+            else:
+                update = jax.jit(jax.nn.relu)
+                t_upd = time_fn(update, a)
+
+            tot = t_ext + t_agg + t_upd
+            emit(f"fig2/{model}/{ds}/extract_us", round(t_ext, 1),
+                 f"{100*t_ext/tot:.0f}%")
+            emit(f"fig2/{model}/{ds}/aggregate_us", round(t_agg, 1),
+                 f"{100*t_agg/tot:.0f}%")
+            emit(f"fig2/{model}/{ds}/update_us", round(t_upd, 1),
+                 f"{100*t_upd/tot:.0f}%")

@@ -1,0 +1,34 @@
+"""Fig. 15 / Table 3 — graph-tiling schedule I/O cost: adaptive
+(EnGN) vs fixed Column vs fixed Row, replayed per layer of a 2-layer
+GCN on Table-5 dataset dimensions."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.graphs.generate import DATASET_STATS
+from repro.graphs.partition import (io_cost, simulated_io_bytes,
+                                    tile_schedule_order)
+
+HIDDEN = 16
+Q = 16          # intervals
+
+
+def _layer_io(order: str, f: int, h: int, interval: int):
+    r, w = simulated_io_bytes(Q, order, f, h, interval)
+    return r + w
+
+
+def run():
+    for ds in ("cora", "pubmed", "nell", "corafull", "reddit", "enwiki"):
+        v, e, f, labels = DATASET_STATS[ds]
+        interval = -(-v // Q)
+        # layer 1: F -> HIDDEN;  layer 2: HIDDEN -> labels
+        dims = [(f, HIDDEN), (HIDDEN, labels)]
+        total = {"column": 0, "row": 0, "adaptive": 0}
+        for (fi, hi) in dims:
+            total["column"] += _layer_io("column", fi, hi, interval)
+            total["row"] += _layer_io("row", fi, hi, interval)
+            total["adaptive"] += _layer_io(tile_schedule_order(fi, hi),
+                                           fi, hi, interval)
+        emit(f"fig15/{ds}/io_bytes_adaptive", total["adaptive"],
+             f"vs_column={total['column']/total['adaptive']:.2f}x "
+             f"vs_row={total['row']/total['adaptive']:.2f}x")

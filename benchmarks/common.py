@@ -1,0 +1,35 @@
+"""Shared benchmark utilities: timing, CSV emission, dataset scaling."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+# CPU-hosted benches stay tractable by scaling Table-5 datasets down.
+SCALE = dict(max_vertices=20_000, max_edges=200_000)
+
+_ROWS: List[str] = []
+
+
+def emit(name: str, value, derived: str = ""):
+    row = f"{name},{value},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def rows() -> List[str]:
+    return list(_ROWS)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)

@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig15]
+
+Emits ``name,value,derived`` CSV rows (also saved to
+experiments/bench_results.csv).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+from benchmarks import (bench_stage_breakdown, bench_edge_reorg,
+                        bench_dim_sensitivity, bench_dasr, bench_tiling,
+                        bench_davc, bench_scaling, bench_throughput,
+                        bench_ablation)
+from benchmarks.common import rows
+
+BENCHES = {
+    "fig2": bench_stage_breakdown,      # stage breakdown
+    "fig10": bench_throughput,          # throughput vs baseline
+    "fig12": bench_edge_reorg,          # edge reorg / utilisation
+    "fig13": bench_dim_sensitivity,     # dimension sensitivity
+    "fig14": bench_dasr,                # DASR speedup
+    "fig15": bench_tiling,              # tiling schedule I/O
+    "fig16": bench_davc,                # DAVC hit rates
+    "fig17": bench_scaling,             # PE/ring scaling
+    "ablation": bench_ablation,         # technique-by-technique
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated figure keys (default: all)")
+    args = ap.parse_args()
+    keys = [k for k in args.only.split(",") if k] or list(BENCHES)
+
+    print("name,value,derived")
+    for k in keys:
+        t0 = time.time()
+        print(f"# --- {k} ({BENCHES[k].__doc__.splitlines()[0].strip()})",
+              flush=True)
+        BENCHES[k].run()
+        print(f"# {k} done in {time.time() - t0:.1f}s", flush=True)
+
+    out = Path("experiments/bench_results.csv")
+    out.parent.mkdir(exist_ok=True)
+    out.write_text("name,value,derived\n" + "\n".join(rows()) + "\n")
+    print(f"# wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,56 @@
+"""Quickstart: GCN inference on a Cora-scale graph through the EnGN path.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the whole production pipeline in ~30 lines: build a graph, apply
+degree-aware relabelling (the TPU DAVC), normalise, pick the tiled
+RER-SpMM backend, run a 2-layer GCN, undo the relabelling.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engn import prepare_graph
+from repro.core.models import make_gnn_stack, init_stack, apply_stack
+from repro.graphs.degree import (apply_vertex_permutation,
+                                 degree_sort_permutation, permute_features,
+                                 unpermute_features)
+from repro.graphs.generate import make_dataset, random_features
+
+
+def main():
+    # Cora: 2708 vertices, 10556 edges, F=1433, 7 classes (Table 5)
+    g, f, classes = make_dataset("cora", seed=0)
+    x = random_features(g.num_vertices, f, seed=1)
+    print(f"graph: |V|={g.num_vertices} |E|={g.num_edges} F={f}")
+
+    # 1. degree-aware relabelling — hubs first (TPU analogue of DAVC)
+    perm = degree_sort_permutation(g)
+    g = apply_vertex_permutation(g, perm)
+    x = permute_features(x, perm)
+
+    # 2. GCN normalisation D^-1/2 (A+I) D^-1/2, host-side
+    g = g.gcn_normalized()
+
+    # 3. two-layer GCN on the fused extract+aggregate backend (Fig. 8
+    #    stage overlap); DASR picks the stage order per layer from (F, H)
+    layers = make_gnn_stack("gcn", [f, 64, classes], backend="fused",
+                            tile=256)
+    params = init_stack(layers, jax.random.key(0))
+    graph = prepare_graph(g, layers[0].cfg)
+    for i, l in enumerate(layers):
+        print(f"layer {i}: F={l.cfg.in_dim} H={l.cfg.out_dim} "
+              f"DASR order={l.dasr_order()}")
+
+    y = apply_stack(layers, params, graph, jnp.asarray(x))
+    y = unpermute_features(np.asarray(y), perm)
+
+    pred = y.argmax(-1)
+    print(f"output: {y.shape}, predictions of first 10 vertices: "
+          f"{pred[:10].tolist()}")
+    assert np.isfinite(y).all()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""End-to-end driver: train a 2-layer GCN for node classification with
+the full production substrate — deterministic data pipeline, AdamW,
+cosine schedule, fault-tolerant runner with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_gnn.py [--steps 300]
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.engn import prepare_graph
+from repro.core.models import make_gnn_stack, init_stack, apply_stack
+from repro.data.pipeline import GraphNodeStream
+from repro.distributed.fault import FaultConfig, FaultTolerantRunner
+from repro.graphs.generate import make_dataset, random_features
+from repro.training.optimizer import (AdamWConfig, adamw_update,
+                                      clip_by_global_norm, init_opt_state)
+from repro.training.schedule import cosine_schedule
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--dataset", default="pubmed")
+    args = ap.parse_args()
+
+    g, f, classes = make_dataset(args.dataset, max_vertices=4000,
+                                 max_edges=30000)
+    f = min(f, 128)
+    x = jnp.asarray(random_features(g.num_vertices, f, seed=0))
+    # synthetic ground truth from a hidden teacher GNN
+    teacher = make_gnn_stack("gcn", [f, 16, classes])
+    tp = init_stack(teacher, jax.random.key(42))
+    gd = prepare_graph(g.gcn_normalized(), teacher[0].cfg)
+    y_true = jnp.argmax(apply_stack(teacher, tp, gd, x), -1)
+
+    layers = make_gnn_stack("gcn", [f, 32, classes])
+    params = init_stack(layers, jax.random.key(0))
+    opt_cfg = AdamWConfig(weight_decay=0.01)
+
+    def loss_fn(ps, nodes, labels):
+        logits = apply_stack(layers, ps, gd, x)[nodes]
+        ll = jax.nn.log_softmax(logits, -1)
+        return -jnp.mean(jnp.take_along_axis(ll, labels[:, None], 1))
+
+    @jax.jit
+    def train_step(ps, opt, batch):
+        nodes = batch["nodes"]
+        labels = y_true[nodes]
+        loss, grads = jax.value_and_grad(loss_fn)(ps, nodes, labels)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        lr = cosine_schedule(opt["count"] + 1, peak_lr=5e-3, warmup=20,
+                             total=args.steps)
+        ps, opt = adamw_update(opt_cfg, grads, opt, ps, lr)
+        return ps, opt, {"loss": loss, "lr": lr}
+
+    losses = []
+
+    def logged_step(ps, opt, batch):
+        ps, opt, m = train_step(ps, opt, batch)
+        losses.append(float(m["loss"]))
+        if len(losses) % 50 == 0:
+            print(f"step {len(losses):4d}  loss {losses[-1]:.4f}  "
+                  f"lr {float(m['lr']):.2e}")
+        return ps, opt, m
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        runner = FaultTolerantRunner(
+            logged_step, CheckpointManager(ckdir, keep=2),
+            FaultConfig(ckpt_every=100))
+        data = GraphNodeStream(g.num_vertices, classes, batch=256, seed=1)
+        state = {"params": params, "opt": init_opt_state(params)}
+        state, last = runner.run(state, data, num_steps=args.steps)
+
+    acc = float(jnp.mean(
+        (jnp.argmax(apply_stack(layers, state["params"], gd, x), -1)
+         == y_true)))
+    print(f"done: {last} steps, loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
+          f"teacher-agreement {acc:.2%}, checkpoints saved: "
+          f"{runner.stats['saves']}")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, glob, itertools
+from pathlib import Path
+from repro.configs import ARCH_IDS
+from repro.launch import specs as SP
+from repro.launch.dryrun import run_cell
+
+out = Path("experiments/dryrun")
+have = {}
+for f in glob.glob(str(out / "*.json")):
+    r = json.load(open(f))
+    have[(r["arch"], r["shape"], r["mesh"])] = r["status"]
+
+for arch, shape, mesh in itertools.product(ARCH_IDS, SP.SHAPES, ["single", "multi"]):
+    st = have.get((arch, shape, mesh))
+    if st in ("ok", "skipped"):
+        continue
+    rec = run_cell(arch, shape, mesh, out)
+    extra = ""
+    if rec["status"] == "ok":
+        r = rec["roofline"]
+        extra = f"dom={r['dominant']} frac={r['roofline_fraction']:.2f} compile={rec['compile_s']}s"
+    elif rec["status"] == "error":
+        extra = rec["error"][:200]
+    print(f"[{rec['status']:7s}] {arch:28s} {shape:12s} {mesh:6s} {extra}", flush=True)
+print("resume sweep done")

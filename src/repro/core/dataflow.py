@@ -1,0 +1,98 @@
+"""Ring-Edge-Reduce at pod scale (paper S4.1.2, adapted per DESIGN.md C2).
+
+The ASIC connects PEs in a column into a ring; vertex properties flow
+around the ring and every PE reduces the edges it owns.  The TPU analogue
+lives one level up: *devices* form the ring (ICI torus), vertex-feature
+shards rotate with `lax.ppermute`, and each device reduces the adjacency
+blocks it owns against whichever shard is currently resident.  Each hop's
+permute is issued before the block contraction so XLA's latency-hiding
+scheduler overlaps communication with the MXU work — the same
+keep-the-ring-busy property the paper gets from edge reorganisation.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def _ring_step_perm(p: int):
+    # receive from the southern neighbour: (i+1) % p sends to i
+    return [((i + 1) % p, i) for i in range(p)]
+
+
+def ring_aggregate_dense(a_blocks: jnp.ndarray, x_shard: jnp.ndarray,
+                         axis_name: str, op: str = "sum") -> jnp.ndarray:
+    """One RER rotation.  Must run inside shard_map over `axis_name`.
+
+    a_blocks: (P, n_loc, n_loc) — this device's dst rows of A, split by
+              source shard (a_blocks[s] multiplies the shard owned by
+              device s).
+    x_shard:  (n_loc, F) — this device's vertex features.
+    Returns (n_loc, F): aggregated features for this device's vertices.
+    """
+    p = jax.lax.psum(1, axis_name)
+    me = jax.lax.axis_index(axis_name)
+    init_acc = jnp.zeros(x_shard.shape, jnp.float32) if op == "sum" else \
+        jnp.full(x_shard.shape, -jnp.inf, jnp.float32)
+    # mark the carry as device-varying so the fori_loop carry types match
+    # after the ppermute (shard_map vma semantics)
+    init_acc = jax.lax.pvary(init_acc, (axis_name,))
+
+    def body(k, carry):
+        x_rot, acc = carry
+        src_shard = jax.lax.rem(me + k, p)
+        blk = jax.lax.dynamic_index_in_dim(a_blocks, src_shard, 0,
+                                           keepdims=False)
+        # issue the hop first so it overlaps the contraction below
+        x_next = jax.lax.ppermute(x_rot, axis_name, _ring_step_perm(p))
+        if op == "sum":
+            contrib = jnp.dot(blk, x_rot,
+                              preferred_element_type=jnp.float32)
+            acc = acc + contrib
+        else:
+            # max: elementwise per-edge, non-edges contribute -inf
+            vals = jnp.where(blk[:, :, None] != 0.0,
+                             blk[:, :, None] * x_rot[None, :, :], -jnp.inf)
+            acc = jnp.maximum(acc, jnp.max(vals, axis=1))
+        return (x_next, acc)
+
+    _, acc = jax.lax.fori_loop(0, p, body, (x_shard, init_acc))
+    if op == "max":
+        acc = jnp.where(jnp.isinf(acc), 0.0, acc)
+    return acc
+
+
+def make_ring_aggregate(mesh: Mesh, axis: str, op: str = "sum") -> Callable:
+    """shard_map wrapper: (A_blocks_global, X_global) -> AX.
+
+    A_blocks_global: (P, P, n_loc, n_loc) with A_blocks_global[d, s] the
+    block of A mapping shard s sources to shard d destinations.
+    X_global: (N, F) row-sharded over `axis`.
+    """
+    fn = partial(ring_aggregate_dense, axis_name=axis, op=op)
+
+    def inner(a_blocks, x):
+        # a_blocks arrives as (1, P, n_loc, n_loc) per device; squeeze.
+        return fn(a_blocks[0], x)
+
+    return shard_map(inner, mesh=mesh,
+                     in_specs=(P(axis, None, None, None), P(axis, None)),
+                     out_specs=P(axis, None))
+
+
+def shard_adjacency_for_ring(a_dense, num_shards: int):
+    """Host-side: dense A (N, N) -> (P, P, n_loc, n_loc) ring blocks,
+    padding N up to a multiple of P."""
+    import numpy as np
+    n = a_dense.shape[0]
+    n_loc = -(-n // num_shards)
+    pad = num_shards * n_loc - n
+    if pad:
+        a_dense = np.pad(a_dense, ((0, pad), (0, pad)))
+    a = a_dense.reshape(num_shards, n_loc, num_shards, n_loc)
+    return np.ascontiguousarray(a.transpose(0, 2, 1, 3))

@@ -1,0 +1,183 @@
+"""The EnGN processing model (paper S2.2, Algorithm 1).
+
+Every GNN is expressed as three stage functions over an edge-centric graph:
+
+    feature_extraction(prop_src, prop_dst, W_feat) -> tmp       (per edge)
+    aggregate(acc, tmp)                            -> acc       (reduce @ dst)
+    update(prop_dst, acc, W_update)                -> prop'     (per vertex)
+
+`EnGNLayer` is the composable module: it owns the stage functions, the
+DASR decision (S5.2) and the aggregation backend (dense-tile Pallas kernel,
+segment reference, or pod-scale RER ring).  Models in core/models.py are
+instances of this class per Table 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.format import COOGraph, coo_to_blocked, blocked_to_device
+from repro.graphs.partition import tile_schedule_order
+
+
+AggregateOp = str  # "sum" | "max" | "mean"
+
+
+def segment_aggregate(edge_vals: jnp.ndarray, dst: jnp.ndarray, n: int,
+                      op: AggregateOp) -> jnp.ndarray:
+    """Edge-centric reduce at destination vertices — the reference path
+    (Algorithm 1 lines 2-5 literally)."""
+    if op == "sum":
+        return jax.ops.segment_sum(edge_vals, dst, num_segments=n)
+    if op == "max":
+        m = jax.ops.segment_max(edge_vals, dst, num_segments=n,
+                                indices_are_sorted=False)
+        # empty segments come back -inf; the kernel convention is 0
+        return jnp.where(jnp.isneginf(m), 0.0, m)
+    if op == "mean":
+        s = jax.ops.segment_sum(edge_vals, dst, num_segments=n)
+        c = jax.ops.segment_sum(jnp.ones_like(dst, jnp.float32), dst,
+                                num_segments=n)
+        return s / jnp.maximum(c, 1.0)[:, None]
+    raise ValueError(op)
+
+
+@dataclasses.dataclass
+class EnGNConfig:
+    in_dim: int
+    out_dim: int
+    aggregate_op: AggregateOp = "sum"
+    # DASR: "auto" picks per Observation 1 / Eq. 6-7; "fau" forces
+    # feature-extraction->aggregate->update; "afu" forces aggregate-first.
+    stage_order: str = "auto"
+    backend: str = "segment"          # "segment" | "tiled" | "fused" | "ring"
+    tile: int = 256                   # T for the blocked backend
+    dtype: Any = jnp.float32
+
+
+class EnGNLayer:
+    """One GNN propagation layer on the EnGN processing model."""
+
+    def __init__(self, cfg: EnGNConfig, name: str = "engn"):
+        self.cfg = cfg
+        self.name = name
+
+    # -- parameters ------------------------------------------------------
+    def init(self, key: jax.Array) -> Dict[str, jnp.ndarray]:
+        cfg = self.cfg
+        k1, _ = jax.random.split(key)
+        scale = 1.0 / np.sqrt(cfg.in_dim)
+        return {"w": jax.random.normal(k1, (cfg.in_dim, cfg.out_dim),
+                                       cfg.dtype) * scale}
+
+    # -- stage functions (overridden per model) ---------------------------
+    def feature_extraction(self, params, x_src: jnp.ndarray) -> jnp.ndarray:
+        """Default: linear condense XW (GCN-style)."""
+        return x_src @ params["w"]
+
+    def update(self, params, x_self: jnp.ndarray, agg: jnp.ndarray) -> jnp.ndarray:
+        """Default: ReLU activation."""
+        return jax.nn.relu(agg)
+
+    # -- DASR (S5.2): choose sigma(A(XW)) vs sigma((AX)W) -----------------
+    def dasr_order(self) -> str:
+        cfg = self.cfg
+        if cfg.stage_order != "auto":
+            return cfg.stage_order
+        # aggregate cost is E*H if extraction first (Eq. 6) vs E*F if
+        # aggregation first (Eq. 7): extract first iff H <= F.
+        return "fau" if cfg.out_dim <= cfg.in_dim else "afu"
+
+    def dasr_op_counts(self, num_edges: int) -> Dict[str, float]:
+        f, h = self.cfg.in_dim, self.cfg.out_dim
+        return {
+            "fau_aggregate_ops": float(num_edges) * h,
+            "afu_aggregate_ops": float(num_edges) * f,
+        }
+
+    # -- forward ----------------------------------------------------------
+    def apply(self, params, graph, x: jnp.ndarray,
+              aggregate_fn: Optional[Callable] = None) -> jnp.ndarray:
+        """graph: dict of device arrays from `prepare_graph`."""
+        agg = aggregate_fn or partial(self._aggregate, graph)
+        linear_sum = (self.cfg.aggregate_op == "sum"
+                      and type(self).feature_extraction
+                      is EnGNLayer.feature_extraction)
+        if linear_sum and self.cfg.backend == "fused" \
+                and self.dasr_order() == "fau":
+            # Fig. 8 stage overlap: extraction fused into the aggregate
+            # sweep (P = X@W lives only in VMEM per tile)
+            from repro.kernels.fused_engn import fused_engn_layer
+            n = graph["n"]
+            pad_n = graph["blocks_meta"]["padded"]
+            xf = jnp.zeros((pad_n, x.shape[1]), x.dtype).at[:n].set(x)
+            y = fused_engn_layer(graph["blocks"], graph["block_row"],
+                                 graph["block_col"], xf, params["w"],
+                                 q=graph["blocks_meta"]["q"])
+            return self.update(params, x, y[:n])
+        if linear_sum and self.dasr_order() == "afu":
+            ax = agg(x)                                 # (AX)
+            h = self.feature_extraction(params, ax)     # (AX)W
+            return self.update(params, x, h)
+        tmp = self.feature_extraction(params, x)        # XW  (per src vertex)
+        h = agg(tmp)                                    # A(XW)
+        return self.update(params, x, h)
+
+    # -- aggregation backends ---------------------------------------------
+    def _aggregate(self, graph, feat: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.backend == "segment":
+            ev = feat[graph["src"]]
+            if "val" in graph:
+                ev = ev * graph["val"][:, None]
+            return segment_aggregate(ev, graph["dst"], graph["n"], cfg.aggregate_op)
+        if cfg.backend in ("tiled", "fused"):
+            from repro.kernels.rer_spmm import ops as spmm_ops
+            n = graph["n"]
+            pad_n = graph["blocks_meta"]["padded"]
+            xf = jnp.zeros((pad_n, feat.shape[1]), feat.dtype).at[:n].set(feat)
+            y = spmm_ops.blocked_spmm(graph["blocks"], graph["block_row"],
+                                      graph["block_col"], xf,
+                                      q=graph["blocks_meta"]["q"],
+                                      op=cfg.aggregate_op)
+            return y[:n]
+        if cfg.backend == "ring":
+            from repro.core.dataflow import ring_aggregate_dense
+            return ring_aggregate_dense(graph["dense_shards"], feat,
+                                        graph["axis"], op=cfg.aggregate_op)
+        raise ValueError(cfg.backend)
+
+
+def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
+    """Host-side 'format converter': build the device-side graph dict for
+    the chosen backend, including the adaptive tile-schedule decision."""
+    d: Dict[str, Any] = {"n": g.num_vertices}
+    if cfg.backend == "segment":
+        d["src"] = jnp.asarray(g.src)
+        d["dst"] = jnp.asarray(g.dst)
+        if g.val is not None:
+            d["val"] = jnp.asarray(g.val)
+        return d
+    if cfg.backend in ("tiled", "fused"):
+        from repro.kernels.rer_spmm.ops import prepare_blocks
+        h = out_dim if out_dim is not None else cfg.out_dim
+        # The adaptive order (Table 3) is recorded for the I/O analysis;
+        # on TPU the kernel itself mandates the dst-stationary layout
+        # (output tiles must be revisited consecutively), so the blocks
+        # are always dst-sorted before upload — see rer_spmm docstring.
+        order = tile_schedule_order(cfg.in_dim, h)
+        b = coo_to_blocked(g, cfg.tile, order="column")
+        blocks, brow, bcol = prepare_blocks(b.blocks, b.block_row,
+                                            b.block_col, b.q)
+        d["blocks"] = jnp.asarray(blocks)
+        d["block_row"] = jnp.asarray(brow)
+        d["block_col"] = jnp.asarray(bcol)
+        d["blocks_meta"] = {"q": b.q, "padded": b.padded_vertices,
+                            "order": order, "tile": b.tile}
+        return d
+    raise ValueError(cfg.backend)

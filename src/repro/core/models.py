@@ -1,0 +1,199 @@
+"""The five GNN models of Table 1, instantiated on the EnGN processing model.
+
+| model     | feature_extraction                         | aggregate | update                              |
+|-----------|--------------------------------------------|-----------|-------------------------------------|
+| GCN       | h_u * d^-1/2 (edge-normalised) then XW     | sum       | ReLU(W V_temp)  [W folded via DASR] |
+| GS-Pool   | ReLU(W_pool x_u + b)                       | max       | ReLU(W concat(V_temp, h_v))         |
+| R-GCN     | per-relation normalised                    | sum       | ReLU(sum_r W_r V_r + W_0 h)         |
+| Gated-GCN | sigmoid(W_H h_v + W_C h_u) . h_u           | sum       | ReLU(W V_temp)                      |
+| GRN       | h_u                                        | sum       | GRU(h_v, W V_temp)                  |
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engn import EnGNConfig, EnGNLayer, segment_aggregate
+
+
+def _glorot(key, shape, dtype=jnp.float32):
+    scale = np.sqrt(2.0 / (shape[0] + shape[-1]))
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+class GCNLayer(EnGNLayer):
+    """Kipf & Welling GCN (Eq. 1).  Normalisation D~^-1/2 A~ D~^-1/2 is
+    folded into edge weights host-side (graphs.format.gcn_normalized), so
+    feature extraction is the plain XW condense — exactly the paper's
+    mapping, and the layer where DASR applies."""
+
+
+# ---------------------------------------------------------------------------
+class GSPoolLayer(EnGNLayer):
+    """GraphSAGE-Pool (Eq. 2): max aggregator + concat self in update."""
+
+    def __init__(self, cfg: EnGNConfig, name: str = "gs_pool"):
+        cfg.aggregate_op = "max"
+        cfg.stage_order = "fau"   # max is non-linear: no reordering (S6.3)
+        super().__init__(cfg, name)
+
+    def init(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_pool": _glorot(k1, (cfg.in_dim, cfg.out_dim), cfg.dtype),
+            "b_pool": jnp.zeros((cfg.out_dim,), cfg.dtype),
+            "w": _glorot(k2, (cfg.out_dim + cfg.in_dim, cfg.out_dim), cfg.dtype),
+        }
+
+    def feature_extraction(self, params, x_src):
+        return jax.nn.relu(x_src @ params["w_pool"] + params["b_pool"])
+
+    def update(self, params, x_self, agg):
+        cat = jnp.concatenate([agg, x_self], axis=-1)
+        return jax.nn.relu(cat @ params["w"])
+
+
+# ---------------------------------------------------------------------------
+class RGCNLayer(EnGNLayer):
+    """Relational GCN (Eq. 3): one aggregation per relation type, summed
+    through per-relation weights, plus a self-loop W_0 h."""
+
+    def __init__(self, cfg: EnGNConfig, num_relations: int, name: str = "rgcn"):
+        super().__init__(cfg, name)
+        self.num_relations = num_relations
+
+    def init(self, key):
+        cfg = self.cfg
+        k0, kr = jax.random.split(key)
+        return {
+            "w0": _glorot(k0, (cfg.in_dim, cfg.out_dim), cfg.dtype),
+            "wr": _glorot(kr, (self.num_relations, cfg.in_dim, cfg.out_dim),
+                          cfg.dtype),
+        }
+
+    def apply(self, params, graph, x, aggregate_fn=None):
+        n = graph["n"]
+        src, dst, rel = graph["src"], graph["dst"], graph["rel"]
+        # per-edge normalisation 1/c_{i,r} = 1/|N_i^r|
+        ones = jnp.ones_like(dst, jnp.float32)
+        # count edges per (dst, rel) pair
+        key = dst * self.num_relations + rel
+        cnt = jax.ops.segment_sum(ones, key, num_segments=n * self.num_relations)
+        norm = 1.0 / jnp.maximum(cnt[key], 1.0)
+        # DASR applies per relation: aggregate first (AFU) keeps the edge
+        # work at F dims; extract-first (FAU) keeps it at H dims.
+        if self.dasr_order() == "fau":
+            xw = jnp.einsum("nf,rfh->rnh", x, params["wr"])     # R x N x H
+            ev = xw[rel, src] * norm[:, None]
+            agg = jax.ops.segment_sum(ev, dst, num_segments=n)
+        else:
+            # aggregate per relation in F dims, then contract with W_r
+            ev = x[src] * norm[:, None]
+            agg_rf = jax.ops.segment_sum(ev, key, num_segments=n * self.num_relations)
+            agg_rf = agg_rf.reshape(n, self.num_relations, x.shape[1])
+            agg = jnp.einsum("nrf,rfh->nh", agg_rf, params["wr"])
+        return jax.nn.relu(x @ params["w0"] + agg)
+
+
+# ---------------------------------------------------------------------------
+class GatedGCNLayer(EnGNLayer):
+    """Gated-GCN (Eq. 4): edge gate eta_uv = sigmoid(W_H h_v + W_C h_u),
+    message = eta . h_u, sum-aggregate, ReLU(W .) update."""
+
+    def __init__(self, cfg: EnGNConfig, name: str = "gated_gcn"):
+        cfg.stage_order = "fau"   # gate depends on both endpoints: no reorder
+        super().__init__(cfg, name)
+
+    def init(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_h": _glorot(k1, (cfg.in_dim, cfg.in_dim), cfg.dtype),
+            "w_c": _glorot(k2, (cfg.in_dim, cfg.in_dim), cfg.dtype),
+            "w": _glorot(k3, (cfg.in_dim, cfg.out_dim), cfg.dtype),
+        }
+
+    def apply(self, params, graph, x, aggregate_fn=None):
+        n = graph["n"]
+        src, dst = graph["src"], graph["dst"]
+        # project once per vertex (N x F), gate per edge (E x F)
+        ph = x @ params["w_h"]          # destination part
+        pc = x @ params["w_c"]          # source part
+        eta = jax.nn.sigmoid(ph[dst] + pc[src])
+        ev = eta * x[src]
+        agg = segment_aggregate(ev, dst, n, "sum")
+        return jax.nn.relu(agg @ params["w"])
+
+
+# ---------------------------------------------------------------------------
+class GRNLayer(EnGNLayer):
+    """Graph recurrent network (Eq. 5): h' = GRU(h_v, sum_u W h_u)."""
+
+    def init(self, key):
+        cfg = self.cfg
+        assert cfg.in_dim == cfg.out_dim, "GRU state keeps the dimension"
+        d = cfg.in_dim
+        ks = jax.random.split(key, 7)
+        return {
+            "w": _glorot(ks[0], (d, d), cfg.dtype),
+            "w_z": _glorot(ks[1], (d, d), cfg.dtype),
+            "u_z": _glorot(ks[2], (d, d), cfg.dtype),
+            "w_r": _glorot(ks[3], (d, d), cfg.dtype),
+            "u_r": _glorot(ks[4], (d, d), cfg.dtype),
+            "w_n": _glorot(ks[5], (d, d), cfg.dtype),
+            "u_n": _glorot(ks[6], (d, d), cfg.dtype),
+        }
+
+    def feature_extraction(self, params, x_src):
+        return x_src @ params["w"]
+
+    def update(self, params, x_self, agg):
+        z = jax.nn.sigmoid(agg @ params["w_z"] + x_self @ params["u_z"])
+        r = jax.nn.sigmoid(agg @ params["w_r"] + x_self @ params["u_r"])
+        nh = jnp.tanh(agg @ params["w_n"] + (r * x_self) @ params["u_n"])
+        return (1.0 - z) * nh + z * x_self
+
+
+# ---------------------------------------------------------------------------
+MODEL_REGISTRY = {
+    "gcn": GCNLayer,
+    "gs_pool": GSPoolLayer,
+    "rgcn": RGCNLayer,
+    "gated_gcn": GatedGCNLayer,
+    "grn": GRNLayer,
+}
+
+
+def make_gnn(model: str, in_dim: int, out_dim: int, backend: str = "segment",
+             num_relations: int = 1, tile: int = 256,
+             stage_order: str = "auto") -> EnGNLayer:
+    cfg = EnGNConfig(in_dim=in_dim, out_dim=out_dim, backend=backend,
+                     tile=tile, stage_order=stage_order)
+    if model == "rgcn":
+        return RGCNLayer(cfg, num_relations)
+    return MODEL_REGISTRY[model](cfg)
+
+
+def make_gnn_stack(model: str, dims, backend: str = "segment",
+                   num_relations: int = 1, tile: int = 256):
+    """A multi-layer GNN: dims = [F_in, H_1, ..., H_out]."""
+    layers = [make_gnn(model, dims[i], dims[i + 1], backend=backend,
+                       num_relations=num_relations, tile=tile)
+              for i in range(len(dims) - 1)]
+    return layers
+
+
+def init_stack(layers, key):
+    keys = jax.random.split(key, len(layers))
+    return [l.init(k) for l, k in zip(layers, keys)]
+
+
+def apply_stack(layers, params, graph, x):
+    for layer, p in zip(layers, params):
+        x = layer.apply(p, graph, x)
+    return x

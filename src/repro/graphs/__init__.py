@@ -1,0 +1,12 @@
+"""Graph substrate: formats, generators, partitioning, degree analysis."""
+from repro.graphs.format import COOGraph, CSRGraph, BlockedAdjacency, coo_to_csr, coo_to_blocked
+from repro.graphs.generate import rmat_graph, dataset_stats, make_dataset
+from repro.graphs.partition import grid_partition, tile_schedule_order
+from repro.graphs.degree import degree_sort_permutation, apply_vertex_permutation
+
+__all__ = [
+    "COOGraph", "CSRGraph", "BlockedAdjacency", "coo_to_csr", "coo_to_blocked",
+    "rmat_graph", "dataset_stats", "make_dataset",
+    "grid_partition", "tile_schedule_order",
+    "degree_sort_permutation", "apply_vertex_permutation",
+]

@@ -1,0 +1,3 @@
+from repro.kernels.feature_update.ops import fused_linear_act
+
+__all__ = ["fused_linear_act"]

@@ -1,0 +1,40 @@
+"""jit'd wrapper for the fused linear+activation kernel, with padding."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.feature_update.feature_update import fused_linear_act_kernel
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("act", "tn", "th", "tf", "interpret"))
+def _fused_jit(x, w, b, *, act, tn, th, tf, interpret):
+    n, f = x.shape
+    h = w.shape[1]
+    pn, pf, ph = (-n) % tn if n > tn else 0, (-f) % tf if f > tf else 0, \
+        (-h) % th if h > th else 0
+    # for dims smaller than a tile the kernel shrinks the tile instead
+    if pn or pf or ph:
+        x = jnp.pad(x, ((0, pn), (0, pf)))
+        w = jnp.pad(w, ((0, pf), (0, ph)))
+        b = jnp.pad(b, (0, ph))
+    y = fused_linear_act_kernel(x, w, b, act=act, tn=tn, th=th, tf=tf,
+                                interpret=interpret)
+    return y[:n, :h]
+
+
+def fused_linear_act(x, w, b=None, *, act: str = "relu", tn: int = 256,
+                     th: int = 256, tf: int = 512,
+                     interpret: bool | None = None):
+    if b is None:
+        b = jnp.zeros((w.shape[1],), jnp.float32)
+    if interpret is None:
+        interpret = _is_cpu()
+    return _fused_jit(x, w, b, act=act, tn=tn, th=th, tf=tf,
+                      interpret=interpret)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused feature-extraction/update kernel."""
+import jax
+import jax.numpy as jnp
+
+_ACTS = {"relu": jax.nn.relu, "sigmoid": jax.nn.sigmoid,
+         "tanh": jnp.tanh, "none": lambda x: x}
+
+
+def fused_linear_act_ref(x, w, b, *, act: str = "relu"):
+    return _ACTS[act](x @ w + b[None, :])

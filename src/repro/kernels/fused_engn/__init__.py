@@ -1,0 +1,3 @@
+from repro.kernels.fused_engn.ops import fused_engn_layer  # noqa: F401
+from repro.kernels.fused_engn.ref import (  # noqa: F401
+    fused_extract_aggregate_ref)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused extract+aggregate kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_extract_aggregate_ref(blocks, block_row, block_col, x, w, *,
+                                q: int) -> jnp.ndarray:
+    """Dense reference: Y = A @ (X @ W), A reassembled from tiles."""
+    nnzb, t, _ = blocks.shape
+    n = q * t
+    a = jnp.zeros((n, n), jnp.float32)
+    for k in range(nnzb):
+        i, j = int(block_row[k]), int(block_col[k])
+        a = a.at[i * t:(i + 1) * t, j * t:(j + 1) * t].add(blocks[k])
+    return a @ (x @ w)

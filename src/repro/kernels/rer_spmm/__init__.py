@@ -1,0 +1,4 @@
+from repro.kernels.rer_spmm import ops, ref
+from repro.kernels.rer_spmm.ops import blocked_spmm
+
+__all__ = ["ops", "ref", "blocked_spmm"]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the RER-SpMM kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def blocked_spmm_ref(blocks, block_row, block_col, x, *, q: int,
+                     op: str = "sum") -> jnp.ndarray:
+    """Dense reference: reassemble A from tiles and reduce.
+
+    Semantics must match rer_spmm exactly, including 'max' treating
+    zero entries in a tile as non-edges and empty rows producing 0.
+    """
+    nnzb, t, _ = blocks.shape
+    n = q * t
+    a = jnp.zeros((n, n), jnp.float32)
+    for k in range(nnzb):
+        i, j = int(block_row[k]), int(block_col[k])
+        a = a.at[i * t:(i + 1) * t, j * t:(j + 1) * t].add(blocks[k])
+    if op == "sum":
+        return a @ x
+    vals = jnp.where(a[:, :, None] != 0.0, a[:, :, None] * x[None, :, :],
+                     -jnp.inf)
+    out = jnp.max(vals, axis=1)
+    return jnp.where(jnp.isneginf(out), 0.0, out)

@@ -1,0 +1,226 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (the targets; this container only compiles).
+
+    compute term    = HLO_FLOPs / (chips x peak)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+cost_analysis() reports the per-device partitioned module, so FLOPs/bytes
+are multiplied back by `chips` before normalising (i.e. terms use
+per-device numbers directly).  collective_bytes is parsed from the
+post-SPMD HLO text: the sum of result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9_\[\]{},:\s/()#\.]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind from HLO text,
+    multiplying through while-loop trip counts (a scanned layer loop's
+    per-layer weight gathers happen `num_layers` times, not once).
+
+    Computation blocks are parsed; `while` ops map body computations to
+    the trip count extracted from their condition computation (the
+    largest integer constant — lax.scan conditions compare the induction
+    variable against the length).
+    """
+    # --- split into computation blocks ---
+    blocks: Dict[str, list] = {}
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # param lists may nest parens (tuple-typed while-body params:
+        # "%body (p: (s32[], f32[...])) -> (...) {") — match greedily.
+        m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$", s)
+        if m and not s.startswith("//"):
+            cur = m.group(2)
+            blocks[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None:
+            blocks[cur].append(s)
+
+    if not blocks:
+        return {}
+    if entry is None:
+        entry = max(blocks, key=lambda k: len(blocks[k]))
+
+    _WHILE_RE = re.compile(
+        r"while\(.*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+    _CONST_RE = re.compile(r"constant\((\d+)\)")
+
+    def trip_count(cond_name: str) -> int:
+        best = 1
+        for ln in blocks.get(cond_name, ()):
+            for c in _CONST_RE.findall(ln):
+                best = max(best, int(c))
+        return best
+
+    def walk(name: str, mult: float, out: Dict[str, float], seen):
+        if name in seen:       # defensive: no recursion in HLO anyway
+            return
+        for ln in blocks.get(name, ()):
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                walk(body, mult * trip_count(cond), out, seen | {name})
+                continue
+            m = _COLL_RE.search(ln)
+            if m and "-done(" not in ln:
+                kind = m.group(2).lower()
+                out[kind] = out.get(kind, 0.0) + _shape_bytes(m.group(1)) * mult
+
+    out: Dict[str, float] = {}
+    walk(entry, 1.0, out, frozenset())
+    return {k: int(v) for k, v in out.items()}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO FLOPs
+    hbm_bytes: float             # per-device bytes accessed
+    collective_bytes: float      # per-device collective bytes
+    collectives: Dict[str, int]
+    chips: int
+    hlo_flops_raw: float = 0.0   # cost_analysis values (loop bodies x1)
+    hlo_bytes_raw: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the bound: compute_s / max(all)."""
+        return self.compute_s / max(self.bound_s, 1e-30)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.collective_bytes,
+            "collectives": self.collectives,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "roofline_fraction": self.roofline_fraction(),
+            "chips": self.chips,
+            "hlo_flops_raw": self.hlo_flops_raw,
+            "hlo_bytes_raw": self.hlo_bytes_raw,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int,
+                           global_cost=None) -> Roofline:
+    """Roofline terms for one compiled cell.
+
+    FLOPs/bytes come from the jaxpr walker (`global_cost`, global program)
+    when provided — XLA's cost_analysis counts while bodies once and
+    undercounts scanned stacks ~num_layers x.  Collective bytes are
+    parsed from the post-SPMD HLO with while-trip multipliers (they only
+    exist post-partitioning).  The raw cost_analysis numbers are kept for
+    reference as hlo_* fields.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    colls = parse_collective_bytes(text)
+    cbytes = float(sum(colls.values()))
+    if global_cost is not None:
+        flops = global_cost.flops / chips
+        mem_bytes = global_cost.bytes / chips
+    else:
+        flops, mem_bytes = hlo_flops, hlo_bytes
+    r = Roofline(flops=flops, hbm_bytes=mem_bytes,
+                 collective_bytes=cbytes, collectives=colls, chips=chips)
+    r.hlo_flops_raw = hlo_flops
+    r.hlo_bytes_raw = hlo_bytes
+    return r
+
+
+def model_flops_estimate(cfg, shape_kind: str, seq: int, batch: int) -> float:
+    """MODEL_FLOPS = 6*N_active*D for training, 2*N_active*D for inference
+    (D = tokens processed)."""
+    from repro.nn.transformer import param_count
+    n_total = param_count(cfg)
+    # FFN params scale by the active fraction for MoE
+    frac = cfg.active_params_per_token_factor()
+    if frac < 1.0:
+        # approximate: expert params * frac + the rest
+        from repro.nn.moe import moe_specs
+        from repro.nn.param import param_count as pc
+        expert_params = (pc({"e": moe_specs(cfg)["w_gate"]}) * 3
+                         * sum(cfg.layer_is_moe()))
+        n_active = n_total - expert_params * (1 - frac)
+    else:
+        n_active = n_total
+    tokens = batch * (seq if shape_kind in ("train", "prefill") else 1)
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * n_active * tokens

@@ -1,0 +1,203 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention, SwiGLU MLP.
+
+All functions are pure; parameters are declared via ParamSpec trees so
+init / eval_shape / PartitionSpecs derive from one definition.  Every
+activation passes through an optional `sc(x, logical_axes)` sharding
+constrainer (identity when not distributed).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.config import ModelConfig
+from repro.nn.param import ParamSpec
+
+Constrainer = Callable[[jnp.ndarray, tuple], jnp.ndarray]
+
+
+def no_sc(x, axes):
+    return x
+
+
+# ---------------------------------------------------------------- RMSNorm
+def rmsnorm_specs(d: int):
+    return {"scale": ParamSpec((d,), (None,), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    """Variance in f32, but the (B, S, D) output is produced by bf16
+    multiplies: only the (B, S, 1) inverse-rms stays f32.  This keeps any
+    sharding transition on the norm output in bf16 — with the f32-
+    intermediate formulation the SPMD partitioner hoisted seq all-gathers
+    onto the f32 tensor, doubling collective bytes (EXPERIMENTS.md SPerf
+    granite iteration 2)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(dt)
+    return x * inv * p["scale"].astype(dt)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_tables(positions: jnp.ndarray, hd: int, theta: float):
+    """positions: (S,) -> cos/sin (S, hd/2), f32."""
+    freqs = 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: (..., S, H, hd); cos/sin: (S, hd/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
+                           ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- Attention
+def attention_specs(cfg: ModelConfig, kv_dim: Optional[int] = None):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kd = kv_dim or d
+    sp = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", None)),
+        "wk": ParamSpec((kd, kv, hd), ("embed", "kv_heads", None)),
+        "wv": ParamSpec((kd, kv, hd), ("embed", "kv_heads", None)),
+        "wo": ParamSpec((h, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = ParamSpec((h, hd), ("heads", None), init="zeros")
+        sp["bk"] = ParamSpec((kv, hd), ("kv_heads", None), init="zeros")
+        sp["bv"] = ParamSpec((kv, hd), ("kv_heads", None), init="zeros")
+    return sp
+
+
+def _qkv(cfg: ModelConfig, p, x, x_kv, sc: Constrainer):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = sc(q, ("batch", None, "heads", None))
+    k = sc(k, ("batch", None, "kv_heads", None))
+    v = sc(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, mask_fn, q_offset, sc: Constrainer,
+          q_chunk: int = 512):
+    """Grouped-query attention, q-chunked to bound the score tensor.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd).  mask_fn(qpos, kpos) -> bool.
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / np.sqrt(hd)
+    kpos = jnp.arange(sk)
+
+    def chunk_attn(qc, qstart):
+        cq = qc.shape[1]
+        qg = qc.reshape(b, cq, kv, g, hd)
+        scores = jnp.einsum("bqkgh,bskh->bqkgs", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        qpos = q_offset + qstart + jnp.arange(cq)
+        m = jnp.broadcast_to(mask_fn(qpos[:, None], kpos[None, :]),
+                             (cq, sk))                     # (cq, sk)
+        scores = jnp.where(m[None, :, None, None, :], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bqkgs,bskh->bqkgh", w.astype(v.dtype), v)
+        return out.reshape(b, cq, h, hd)
+
+    if sq <= q_chunk:
+        out = chunk_attn(q, 0)
+    else:
+        assert sq % q_chunk == 0, (sq, q_chunk)
+        nq = sq // q_chunk
+        qs = q.reshape(b, nq, q_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+        def body(_, xs):
+            i, qc = xs
+            return None, chunk_attn(qc, i * q_chunk)
+
+        _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qs))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+    return sc(out, ("batch", None, "heads", None))
+
+
+def attention_train(cfg: ModelConfig, p, x, cos, sin, sc: Constrainer = no_sc,
+                    causal: bool = True, q_chunk: int = 512):
+    """Self-attention over a full sequence (training / encoder)."""
+    q, k, v = _qkv(cfg, p, x, x, sc)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if causal:
+        mask_fn = lambda qp, kp: kp <= qp
+    else:
+        mask_fn = lambda qp, kp: jnp.ones((), bool)
+    out = _sdpa(cfg, q, k, v, mask_fn, 0, sc, q_chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), (k, v)
+
+
+def attention_decode(cfg: ModelConfig, p, x, cache_k, cache_v, pos,
+                     cos_t, sin_t, sc: Constrainer = no_sc):
+    """One-token decode: x (B, 1, D); cache (B, S, KV, hd); pos scalar."""
+    q, k, v = _qkv(cfg, p, x, x, sc)
+    q = apply_rope(q, cos_t, sin_t)
+    k = apply_rope(k, cos_t, sin_t)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    cache_k = sc(cache_k, ("batch", "seq", None, None))
+    cache_v = sc(cache_v, ("batch", "seq", None, None))
+    mask_fn = lambda qp, kp: kp <= pos
+    out = _sdpa(cfg, q, cache_k.astype(x.dtype), cache_v.astype(x.dtype),
+                mask_fn, pos, sc)
+    return (jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)),
+            cache_k, cache_v)
+
+
+def attention_cross(cfg: ModelConfig, p, x, mem_k, mem_v,
+                    sc: Constrainer = no_sc, q_chunk: int = 512):
+    """Cross-attention against precomputed memory K/V (B, Sm, KV, hd).
+    No RoPE on cross-attention (memory has its own positions)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    q = sc(q, ("batch", None, "heads", None))
+    mask_fn = lambda qp, kp: jnp.ones((), bool)
+    out = _sdpa(cfg, q, mem_k.astype(x.dtype), mem_v.astype(x.dtype),
+                mask_fn, 0, sc, q_chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def cross_kv(cfg: ModelConfig, p, memory, sc: Constrainer = no_sc):
+    """Precompute cross-attention K/V from memory (B, Sm, D_mem)."""
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"].astype(memory.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"].astype(memory.dtype))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(memory.dtype)
+        v = v + p["bv"].astype(memory.dtype)
+    return sc(k, ("batch", None, "kv_heads", None)), \
+        sc(v, ("batch", None, "kv_heads", None))
+
+
+# ---------------------------------------------------------------- MLP
+def mlp_specs(d: int, ff: int):
+    return {
+        "w_gate": ParamSpec((d, ff), ("embed", "mlp")),
+        "w_up": ParamSpec((d, ff), ("embed", "mlp")),
+        "w_down": ParamSpec((ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p, x, sc: Constrainer = no_sc):
+    h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * \
+        (x @ p["w_up"].astype(x.dtype))
+    h = sc(h, ("batch", None, "mlp"))
+    return h @ p["w_down"].astype(x.dtype)

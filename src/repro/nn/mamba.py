@@ -1,0 +1,140 @@
+"""Mamba-1 selective SSM block (falcon-mamba, jamba hybrid layers).
+
+Training uses a lax.scan over time; decode is a single state update.  The
+recurrence (per channel c, state dim n):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = <C_t, h_t> + D * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.config import ModelConfig
+from repro.nn.layers import Constrainer, no_sc
+from repro.nn.param import ParamSpec
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, int(np.ceil(cfg.d_model / 16)))
+
+
+def mamba_specs(cfg: ModelConfig):
+    d, di, n, kc = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    r = dt_rank(cfg)
+    return {
+        "w_in": ParamSpec((d, 2 * di), ("embed", "mlp")),
+        "conv_w": ParamSpec((kc, di), (None, "mlp")),
+        "conv_b": ParamSpec((di,), ("mlp",), init="zeros"),
+        "w_x": ParamSpec((di, r + 2 * n), ("mlp", None)),
+        "w_dt": ParamSpec((r, di), (None, "mlp")),
+        "dt_bias": ParamSpec((di,), ("mlp",), init="ones"),
+        "a_log": ParamSpec((di, n), ("mlp", None), init="ones"),
+        "d_skip": ParamSpec((di,), ("mlp",), init="ones"),
+        "w_out": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _ssm_params(cfg, p, xc, weights=None):
+    """xc: (B, S, di) post-conv activations -> dt (B,S,di), B/C (B,S,n).
+
+    `weights` lets the caller pass pre-cast/pre-gathered (w_x, w_dt,
+    dt_bias) so a chunked caller does not re-gather them per chunk."""
+    r, n = dt_rank(cfg), cfg.ssm_state
+    if weights is None:
+        weights = (p["w_x"].astype(xc.dtype), p["w_dt"].astype(xc.dtype),
+                   p["dt_bias"].astype(xc.dtype))
+    w_x, w_dt, dt_bias = weights
+    dbc = xc @ w_x
+    dt_low, bmat, cmat = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_low @ w_dt + dt_bias)
+    return dt, bmat, cmat
+
+
+def _causal_conv(p, x):
+    """Depthwise causal conv over seq: x (B, S, di)."""
+    kc = p["conv_w"].shape[0]
+    w = p["conv_w"].astype(x.dtype)                    # (kc, di)
+    xpad = jnp.pad(x, ((0, 0), (kc - 1, 0), (0, 0)))
+    out = sum(xpad[:, i:i + x.shape[1], :] * w[i] for i in range(kc))
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def mamba_train(cfg: ModelConfig, p, x, sc: Constrainer = no_sc):
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = x @ p["w_in"].astype(x.dtype)
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1 = sc(x1, ("batch", None, "mlp"))
+    x1 = jax.nn.silu(_causal_conv(p, x1))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))       # (di, n)
+
+    def step(h, xs):
+        xt, dtt, bt, ct = xs                           # (B,di) (B,di) (B,n) (B,n)
+        da = jnp.exp(dtt.astype(jnp.float32)[:, :, None] * a[None])
+        h = h * da + (dtt * xt).astype(jnp.float32)[:, :, None] * \
+            bt.astype(jnp.float32)[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct.astype(jnp.float32))
+        return h, y.astype(xt.dtype)
+
+    # Chunked time scan: a flat scan makes backward save the (B, di, n)
+    # carry at EVERY step — 4096 x 16.8 MB ~ 68 GB per layer-period on
+    # jamba train_4k (EXPERIMENTS.md SPerf iteration 4).  Scanning over
+    # chunks with a rematted inner scan saves only the S/chunk boundary
+    # states and recomputes inside the chunk.  The SSM projections
+    # (dt/B/C) are computed *inside* the chunk from the x1 slice — same
+    # total FLOPs, but the full-length (B, S, di) dt tensor and its
+    # time-major copy never exist (SPerf iteration 4c).
+    chunk = min(256, s)
+    while s % chunk:
+        chunk //= 2
+    nck = s // chunk
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    x1_c = x1.transpose(1, 0, 2).reshape(nck, chunk, b, di)
+
+    # pre-cast the SSM projection weights once so the rematted chunk
+    # body does not re-gather them per chunk (falcon train: the per-
+    # chunk re-gather cost 160 GB collective — SPerf iteration 4d)
+    ssm_w = (p["w_x"].astype(x.dtype), p["w_dt"].astype(x.dtype),
+             p["dt_bias"].astype(x.dtype))
+
+    @jax.checkpoint
+    def chunk_body(h, x1_chunk):
+        dt_c, b_c, c_c = _ssm_params(cfg, p, x1_chunk, ssm_w)  # (chunk,B,*)
+        return jax.lax.scan(step, h, (x1_chunk, dt_c, b_c, c_c))
+
+    _, ys = jax.lax.scan(chunk_body, h0, x1_c)         # (nck, chunk, B, di)
+    ys = ys.reshape(s, b, di)
+    y = ys.transpose(1, 0, 2) + x1 * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = sc(y, ("batch", None, "mlp"))
+    return y @ p["w_out"].astype(x.dtype)
+
+
+def mamba_decode(cfg: ModelConfig, p, x, conv_state, ssm_state,
+                 sc: Constrainer = no_sc):
+    """One-token decode.  x: (B, 1, D); conv_state: (B, d_conv-1, di);
+    ssm_state: (B, di, n).  Returns (y, conv_state, ssm_state)."""
+    b = x.shape[0]
+    di, n, kc = cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    xz = x[:, 0] @ p["w_in"].astype(x.dtype)           # (B, 2di)
+    x1, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([conv_state, x1[:, None, :]], axis=1)  # (B,kc,di)
+    conv_state = window[:, 1:]
+    w = p["conv_w"].astype(x.dtype)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, w)
+                     + p["conv_b"].astype(x.dtype))
+    dt, bmat, cmat = _ssm_params(cfg, p, xc[:, None, :])
+    dt, bmat, cmat = dt[:, 0], bmat[:, 0], cmat[:, 0]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt.astype(jnp.float32)[:, :, None] * a[None])
+    ssm_state = ssm_state * da + (dt * xc).astype(jnp.float32)[:, :, None] * \
+        bmat.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", ssm_state, cmat.astype(jnp.float32)
+                   ).astype(x.dtype)
+    y = y + xc * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return (y @ p["w_out"].astype(x.dtype))[:, None, :], conv_state, ssm_state

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts FFN with sorted, capacity-bounded dispatch.
+
+Edge-centric note (DESIGN.md S6): token->expert routing is a bipartite
+graph whose edges are the top-k assignments; the dispatch below is the
+EnGN aggregate stage on that graph — group edges by destination (expert),
+reduce with dense matmuls, scatter back to sources.  Capacity bounding is
+the power-law/DAVC insight: hot experts (hubs) would otherwise blow up the
+dense compute buffer, so overflow tokens are dropped exactly like the
+paper bounds its on-chip working set.
+
+FLOP honesty: compute is E * C * d * ff with C = ceil(T*k/E)*capacity, i.e.
+proportional to *active* parameters, so cost_analysis reflects a real
+top-k MoE, not a dense-all-experts approximation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.config import ModelConfig
+from repro.nn.layers import Constrainer, no_sc
+from repro.nn.param import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig):
+    d, e = cfg.d_model, cfg.n_experts
+    ff = cfg.moe_d_ff or cfg.d_ff
+    sp = {
+        "router": ParamSpec((d, e), ("embed", None)),
+        "w_gate": ParamSpec((e, d, ff), ("experts", "embed", None)),
+        "w_up": ParamSpec((e, d, ff), ("experts", "embed", None)),
+        "w_down": ParamSpec((e, ff, d), ("experts", None, "embed")),
+    }
+    if cfg.n_shared_experts:
+        sff = ff * cfg.n_shared_experts
+        sp["shared"] = {
+            "w_gate": ParamSpec((d, sff), ("embed", "mlp")),
+            "w_up": ParamSpec((d, sff), ("embed", "mlp")),
+            "w_down": ParamSpec((sff, d), ("mlp", "embed")),
+        }
+    return sp
+
+
+def moe_ffn(cfg: ModelConfig, p, x: jnp.ndarray, sc: Constrainer = no_sc,
+            capacity_factor: float = 1.25) -> jnp.ndarray:
+    """Dispatcher: uses the expert-parallel all-to-all path when the
+    constrainer carries a mesh with a model axis > 1 (production), else
+    the single-device dense-dispatch path (tests / CPU examples).
+
+    The pjit-auto scatter formulation (moe_ffn_dense below) lowers to
+    full-buffer all-reduces when tokens are data-sharded and the expert
+    buffer is model-sharded — measured 17.5 TB/device/step on
+    moonshot train_4k (EXPERIMENTS.md SPerf iteration 1) — so the
+    sharded path is not an optimisation but a necessity at scale.
+    """
+    mesh = getattr(sc, "mesh", None)
+    rules = getattr(sc, "rules", None)
+    if mesh is not None and rules is not None:
+        from repro.nn.moe_a2a import moe_ffn_a2a, model_axis_size
+        if model_axis_size(mesh, rules) > 1:
+            return moe_ffn_a2a(cfg, p, x, mesh, rules,
+                               capacity_factor=capacity_factor)
+    return moe_ffn_dense(cfg, p, x, sc, capacity_factor)
+
+
+def moe_ffn_dense(cfg: ModelConfig, p, x: jnp.ndarray,
+                  sc: Constrainer = no_sc,
+                  capacity_factor: float = 1.25) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                  # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(np.ceil(t * k / e * capacity_factor))
+    flat_e = top_i.reshape(-1)                               # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_p = top_p.reshape(-1)
+
+    order = jnp.argsort(flat_e)                              # group by expert
+    ge, gt, gp = flat_e[order], flat_t[order], flat_p[order]
+    # position of each routed token within its expert group
+    group_start = jnp.searchsorted(ge, jnp.arange(e))
+    pos = jnp.arange(t * k) - group_start[ge]
+    keep = pos < cap
+    slot = jnp.where(keep, ge * cap + pos, e * cap)          # drop -> OOB
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(
+        xf[gt], mode="drop")
+    buf = buf[:-1].reshape(e, cap, d)
+    buf = sc(buf, ("experts", None, None))
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    out_buf = sc(out_buf, ("experts", None, None))
+
+    contrib = out_buf.reshape(e * cap, d)[jnp.minimum(slot, e * cap - 1)]
+    contrib = contrib * (gp * keep).astype(x.dtype)[:, None]
+    out = jnp.zeros((t, d), x.dtype).at[gt].add(contrib)
+
+    if cfg.n_shared_experts:
+        from repro.nn.layers import mlp
+        out = out + mlp(p["shared"], xf, no_sc)
+    return out.reshape(b, s, d)
+
+
+def aux_load_balance_loss(cfg: ModelConfig, p, x: jnp.ndarray) -> jnp.ndarray:
+    """Switch-style auxiliary loss (fraction-routed * mean-prob per expert)."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d).astype(jnp.float32)
+    probs = jax.nn.softmax(xf @ p["router"].astype(jnp.float32), axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts), axis=0)
+    return cfg.n_experts * jnp.sum(frac * probs.mean(0))

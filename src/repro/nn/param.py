@@ -1,0 +1,106 @@
+"""Parameter descriptors: one definition drives init, eval_shape and
+sharding-spec construction, so params and their PartitionSpecs can never
+drift apart.
+
+Each leaf is declared with *logical axes* per dimension; the mesh-rule
+table maps logical axes to mesh axes (with divisibility fallback to
+replication), following the 2-D sharding scheme of DESIGN.md S5:
+    embed   -> "data"   (FSDP-style: gathered just-in-time)
+    mlp/heads/vocab/experts -> "model" (tensor/expert parallel)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # "normal" | "zeros" | "ones"
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def initialize(self, key: jax.Array) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        fan_in = self.shape[0] if len(self.shape) > 1 else self.shape[-1]
+        s = self.scale / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, self.shape, jnp.float32) * s).astype(self.dtype)
+
+
+# default logical-axis -> mesh-axis rules (DESIGN.md S5)
+DEFAULT_RULES = {
+    "embed": "data",
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "vocab": "model",
+    "experts": "model",
+    "batch": ("pod", "data"),
+    "seq": "model",
+}
+
+
+def _axis_size(mesh_shape: dict, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh_shape.get(a, 1) for a in axis]))
+    return mesh_shape.get(axis, 1)
+
+
+def spec_to_pspec(spec: ParamSpec, mesh_shape: dict, rules=None) -> P:
+    """Logical axes -> PartitionSpec with divisibility fallback."""
+    rules = rules or DEFAULT_RULES
+    out = []
+    for dim, ax in zip(spec.shape, spec.logical_axes):
+        mesh_ax = rules.get(ax) if ax is not None else None
+        if mesh_ax is None or dim % _axis_size(mesh_shape, mesh_ax) != 0:
+            out.append(None)
+        else:
+            out.append(mesh_ax)
+    return P(*out)
+
+
+def tree_initialize(spec_tree, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [l.initialize(k) for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def tree_shapes(spec_tree):
+    """ShapeDtypeStruct pytree — for dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def tree_pspecs(spec_tree, mesh_shape: dict, rules=None):
+    return jax.tree.map(
+        lambda s: spec_to_pspec(s, mesh_shape, rules), spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def stack_specs(spec_tree, n: int):
+    """Stack a per-layer spec tree n times along a new leading (layer) axis."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (None,) + s.logical_axes,
+                            s.init, s.scale, s.dtype),
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_count(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree,
+                             is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(np.prod(l.shape) for l in leaves))

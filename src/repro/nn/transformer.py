@@ -1,0 +1,437 @@
+"""Composable model definition covering all assigned architecture families.
+
+A model is a stack of `num_layers` blocks whose kinds repeat with period
+`cfg.period()` (dense: 1; jamba: 8; vlm: 5; ...).  Parameters for one
+period are declared as a dict of slots; the full stack is the period tree
+stacked `num_layers/period` times, which lets heterogeneous architectures
+still run under one `lax.scan` (small HLO, fast multi-pod compiles).
+
+Entry points:
+    model_specs / init_params / abstract_params
+    forward_train  -> mean CE loss          (train_4k)
+    prefill        -> last-token logits + KV caches   (prefill_32k)
+    decode_step    -> next-token logits + updated state (decode_*, long_*)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.config import ModelConfig
+from repro.nn import layers as L
+from repro.nn import moe as M
+from repro.nn import mamba as S
+from repro.nn.param import ParamSpec, stack_specs, tree_initialize, tree_shapes
+
+Constrainer = L.Constrainer
+no_sc = L.no_sc
+
+
+# ======================================================================
+# Parameter trees
+# ======================================================================
+
+def _block_specs(cfg: ModelConfig, kind: str, is_moe: bool,
+                 decoder_cross: bool = False) -> Dict[str, Any]:
+    d = cfg.d_model
+    sp: Dict[str, Any] = {"norm1": L.rmsnorm_specs(d)}
+    if kind == "attn":
+        sp["attn"] = L.attention_specs(cfg)
+    elif kind == "cross":
+        sp["cross"] = L.attention_specs(cfg, kv_dim=cfg.frontend_dim or d)
+    elif kind == "mamba":
+        sp["mamba"] = S.mamba_specs(cfg)
+    else:
+        raise ValueError(kind)
+    if decoder_cross:
+        sp["norm_cross"] = L.rmsnorm_specs(d)
+        sp["crossdec"] = L.attention_specs(cfg)
+    if kind != "mamba" or cfg.family == "hybrid":
+        # mamba-only archs (falcon) have no FFN; hybrid (jamba) does
+        if cfg.d_ff > 0 or is_moe:
+            sp["norm2"] = L.rmsnorm_specs(d)
+            sp["ffn"] = M.moe_specs(cfg) if is_moe else \
+                L.mlp_specs(d, cfg.d_ff)
+    return sp
+
+
+def _period_specs(cfg: ModelConfig, decoder_cross: bool = False):
+    kinds, moes = cfg.layer_kinds(), cfg.layer_is_moe()
+    p = cfg.period()
+    return {f"slot{i}": _block_specs(cfg, kinds[i], moes[i], decoder_cross)
+            for i in range(p)}
+
+
+def model_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, vp = cfg.d_model, cfg.padded_vocab
+    nper = cfg.num_layers // cfg.period()
+    sp: Dict[str, Any] = {
+        "embed": ParamSpec((vp, d), ("vocab", "embed"), scale=1.0),
+        "layers": stack_specs(_period_specs(cfg), nper),
+        "final_norm": L.rmsnorm_specs(d),
+    }
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = ParamSpec((d, vp), ("embed", "vocab"))
+    if cfg.family == "encdec":
+        enc_cfg = cfg  # same dims for encoder stack
+        sp["encoder"] = {
+            "layers": stack_specs(
+                {"slot0": _block_specs(cfg, "attn", False)}, cfg.enc_layers),
+            "final_norm": L.rmsnorm_specs(d),
+        }
+        # decoder blocks additionally carry cross-attention
+        sp["layers"] = stack_specs(_period_specs(cfg, decoder_cross=True),
+                                   nper)
+    return sp
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return tree_initialize(model_specs(cfg), key)
+
+
+def abstract_params(cfg: ModelConfig):
+    return tree_shapes(model_specs(cfg))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    from repro.nn.param import param_count as pc
+    return pc(model_specs(cfg))
+
+
+# ======================================================================
+# Blocks
+# ======================================================================
+
+def _apply_block(cfg: ModelConfig, kind: str, is_moe: bool, p, x,
+                 cos, sin, sc: Constrainer, extras: Dict[str, Any],
+                 q_chunk: int, decoder_cross: bool = False):
+    """Training/prefill-mode block.  Returns (x, kv_or_None)."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    # pin the sequence-parallel boundary to the *bf16* norm output: the
+    # qkv projection needs seq gathered, and without the constraint
+    # sandwich below the SPMD partitioner placed the all-gather on the
+    # norm's internal f32 tensor (2x the bytes).  First pin the norm
+    # output seq-SHARDED (so the norm itself computes shard-local), then
+    # pin the gathered form — the transition between the two constraints
+    # is the all-gather, now provably on bf16.  EXPERIMENTS.md SPerf it.2.
+    h = sc(h, ("batch", "seq", None))
+    h = sc(h, ("batch", "gathered_seq", None))
+    kv = None
+    if kind == "attn":
+        a, kv = L.attention_train(cfg, p["attn"], h, cos, sin, sc,
+                                  causal=extras.get("causal", True),
+                                  q_chunk=q_chunk)
+        x = x + a
+    elif kind == "cross":
+        mk, mv = L.cross_kv(cfg, p["cross"], extras["image_embeds"], sc)
+        x = x + L.attention_cross(cfg, p["cross"], h, mk, mv, sc, q_chunk)
+    elif kind == "mamba":
+        x = x + S.mamba_train(cfg, p["mamba"], h, sc)
+    if decoder_cross:
+        h = L.rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+        mk, mv = extras["memory_kv"] if "memory_kv" in extras else \
+            L.cross_kv(cfg, p["crossdec"], extras["memory"], sc)
+        x = x + L.attention_cross(cfg, p["crossdec"], h, mk, mv, sc, q_chunk)
+    if "ffn" in p:
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if is_moe:
+            x = x + M.moe_ffn(cfg, p["ffn"], h, sc)
+        else:
+            x = x + L.mlp(p["ffn"], h, sc)
+    x = sc(x, ("batch", "seq", None))
+    return x, kv
+
+
+def _decode_block(cfg: ModelConfig, kind: str, is_moe: bool, p, x, state,
+                  pos, cos_t, sin_t, sc: Constrainer, extras, decoder_cross):
+    """One-token block.  state: dict for this slot.  Returns (x, state)."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    new_state = dict(state)
+    if kind == "attn":
+        a, ck, cv = L.attention_decode(cfg, p["attn"], h, state["k"],
+                                       state["v"], pos, cos_t, sin_t, sc)
+        new_state["k"], new_state["v"] = ck, cv
+        x = x + a
+    elif kind == "cross":
+        x = x + L.attention_cross(cfg, p["cross"], h, state["mk"],
+                                  state["mv"], sc)
+    elif kind == "mamba":
+        y, cs, ss = S.mamba_decode(cfg, p["mamba"], h, state["conv"],
+                                   state["ssm"], sc)
+        new_state["conv"], new_state["ssm"] = cs, ss
+        x = x + y
+    if decoder_cross:
+        h = L.rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+        x = x + L.attention_cross(cfg, p["crossdec"], h, state["mk"],
+                                  state["mv"], sc)
+    if "ffn" in p:
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + (M.moe_ffn(cfg, p["ffn"], h, sc) if is_moe
+                 else L.mlp(p["ffn"], h, sc))
+    x = sc(x, ("batch", None, None))
+    return x, new_state
+
+
+# ======================================================================
+# Forward (train / prefill)
+# ======================================================================
+
+REMAT_POLICIES = {
+    # recompute everything: minimum memory, maximum recompute (and the
+    # recompute repeats the forward's seq all-gathers in the backward)
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    # save weight-matmul outputs: avoids recomputing the projection dots
+    # and, critically, their sequence-parallel all-gathers in the
+    # backward — EXPERIMENTS.md SPerf iteration 3
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+REMAT_POLICY = "nothing"            # overridden per-experiment
+
+
+def _stack_scan(cfg: ModelConfig, params_layers, x, cos, sin, sc, extras,
+                q_chunk, collect_kv: bool, decoder_cross: bool = False,
+                remat: bool = True):
+    kinds, moes = cfg.layer_kinds(), cfg.layer_is_moe()
+    per = cfg.period()
+
+    def block_fn(i):
+        def f(p_i, x):
+            return _apply_block(cfg, kinds[i], moes[i], p_i, x, cos, sin,
+                                sc, extras, q_chunk, decoder_cross)
+        return f
+
+    def period_body(x, slot_params):
+        kvs = {}
+        for i in range(per):
+            # note: per-block nested jax.checkpoint was tried here and
+            # REGRESSED both temp memory (129->145 GB) and collectives
+            # (38->47 s) on jamba train_4k — XLA reassembles the
+            # recomputation; see EXPERIMENTS.md SPerf iteration 4b.
+            x, kv = block_fn(i)(slot_params[f"slot{i}"], x)
+            if collect_kv and kv is not None:
+                kvs[f"slot{i}"] = {"k": kv[0], "v": kv[1]}
+        return x, (kvs if collect_kv else None)
+
+    body = jax.checkpoint(period_body,
+                          policy=REMAT_POLICIES[REMAT_POLICY]) \
+        if remat else period_body
+    x, kvs = jax.lax.scan(body, x, params_layers)
+    return x, kvs
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens, extras=None,
+                   sc: Constrainer = no_sc, q_chunk: int = 512,
+                   remat: bool = True):
+    """tokens (B, S) -> final hidden states (B, S, D)."""
+    extras = dict(extras or {})
+    dt = cfg.compute_dtype
+    x = params["embed"].astype(dt)[tokens]
+    x = sc(x, ("batch", "seq", None))
+    s = tokens.shape[1]
+    cos, sin = L.rope_tables(jnp.arange(s), cfg.hd, cfg.rope_theta)
+
+    if cfg.family == "encdec":
+        # encoder over stub frame embeddings (bidirectional)
+        mem = extras["frames"].astype(dt)
+        mem = sc(mem, ("batch", "seq", None))
+        sm = mem.shape[1]
+        cose, sine = L.rope_tables(jnp.arange(sm), cfg.hd, cfg.rope_theta)
+        mem, _ = _stack_scan(cfg, params["encoder"]["layers"], mem, cose,
+                             sine, sc, {"causal": False}, q_chunk, False,
+                             remat=remat)
+        mem = L.rmsnorm(params["encoder"]["final_norm"], mem, cfg.norm_eps)
+        extras["memory"] = mem
+        x, _ = _stack_scan(cfg, params["layers"], x, cos, sin, sc, extras,
+                           q_chunk, False, decoder_cross=True, remat=remat)
+    else:
+        x, _ = _stack_scan(cfg, params["layers"], x, cos, sin, sc, extras,
+                           q_chunk, False, remat=remat)
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def _lm_head(cfg: ModelConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_ce_loss(cfg: ModelConfig, params, hidden, labels,
+                    sc: Constrainer = no_sc, chunk: int = 256):
+    """Cross-entropy without materialising (B, S, V) logits: scan over
+    sequence chunks, recompute logits in the backward (checkpoint)."""
+    b, s, d = hidden.shape
+    w = _lm_head(cfg, params)
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    hs = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(h_c, l_c):
+        logits = (h_c @ w.astype(h_c.dtype)).astype(jnp.float32)
+        logits = sc(logits, ("batch", None, "vocab"))
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        safe = jnp.maximum(l_c, 0)
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        mask = (l_c >= 0).astype(jnp.float32)
+        return jnp.sum((lse - ll) * mask), jnp.sum(mask)
+
+    def body(acc, xs):
+        h_c, l_c = xs
+        tl, tm = chunk_loss(h_c, l_c)
+        return (acc[0] + tl, acc[1] + tm), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def forward_train(cfg: ModelConfig, params, batch, sc: Constrainer = no_sc,
+                  q_chunk: int = 512, loss_chunk: int = 256,
+                  remat: bool = True):
+    hidden = forward_hidden(cfg, params, batch["tokens"], batch.get("extras"),
+                            sc, q_chunk, remat)
+    return chunked_ce_loss(cfg, params, hidden, batch["labels"], sc,
+                           loss_chunk)
+
+
+# ======================================================================
+# Serving: prefill + decode
+# ======================================================================
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=None):
+    """Abstract/zero decode state for every slot of every period."""
+    dt = dtype or cfg.compute_dtype
+    kinds = cfg.layer_kinds()
+    per = cfg.period()
+    nper = cfg.num_layers // per
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    slots = {}
+    for i in range(per):
+        k = kinds[i]
+        st = {}
+        if k == "attn":
+            st["k"] = jnp.zeros((nper, batch, max_len, kv, hd), dt)
+            st["v"] = jnp.zeros((nper, batch, max_len, kv, hd), dt)
+        elif k == "cross":
+            np_ = cfg.n_patches
+            st["mk"] = jnp.zeros((nper, batch, np_, kv, hd), dt)
+            st["mv"] = jnp.zeros((nper, batch, np_, kv, hd), dt)
+        elif k == "mamba":
+            st["conv"] = jnp.zeros((nper, batch, cfg.d_conv - 1, cfg.d_inner), dt)
+            st["ssm"] = jnp.zeros((nper, batch, cfg.d_inner, cfg.ssm_state),
+                                  jnp.float32)
+        if cfg.family == "encdec":
+            sm = max_len  # memory length == prompt frame length
+            st["mk"] = jnp.zeros((nper, batch, sm, kv, hd), dt)
+            st["mv"] = jnp.zeros((nper, batch, sm, kv, hd), dt)
+        slots[f"slot{i}"] = st
+    return {"layers": slots, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens,
+                sc: Constrainer = no_sc):
+    """tokens (B, 1) -> (logits (B, Vp), new state).  state from
+    init_decode_state (or prefill)."""
+    dt = cfg.compute_dtype
+    pos = state["pos"]
+    x = params["embed"].astype(dt)[tokens]
+    x = sc(x, ("batch", None, None))
+    cos_t, sin_t = L.rope_tables(pos[None], cfg.hd, cfg.rope_theta)
+
+    kinds, moes = cfg.layer_kinds(), cfg.layer_is_moe()
+    per = cfg.period()
+    decoder_cross = cfg.family == "encdec"
+
+    def period_body(x, xs):
+        slot_params, slot_state = xs
+        new_states = {}
+        for i in range(per):
+            x, ns = _decode_block(cfg, kinds[i], moes[i],
+                                  slot_params[f"slot{i}"], x,
+                                  slot_state[f"slot{i}"], pos, cos_t, sin_t,
+                                  sc, {}, decoder_cross)
+            new_states[f"slot{i}"] = ns
+        return x, new_states
+
+    x, new_layers = jax.lax.scan(period_body, x,
+                                 (params["layers"], state["layers"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x[:, 0] @ _lm_head(cfg, params).astype(dt)).astype(jnp.float32)
+    logits = sc(logits, ("batch", "vocab"))
+    return logits, {"layers": new_layers, "pos": pos + 1}
+
+
+def prefill(cfg: ModelConfig, params, tokens, extras=None,
+            sc: Constrainer = no_sc, q_chunk: int = 512, max_len=None):
+    """Run the prompt, return (last-token logits, decode state)."""
+    extras = dict(extras or {})
+    dt = cfg.compute_dtype
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = params["embed"].astype(dt)[tokens]
+    x = sc(x, ("batch", "seq", None))
+    cos, sin = L.rope_tables(jnp.arange(s), cfg.hd, cfg.rope_theta)
+
+    if cfg.family == "encdec":
+        mem = extras["frames"].astype(dt)
+        sm = mem.shape[1]
+        cose, sine = L.rope_tables(jnp.arange(sm), cfg.hd, cfg.rope_theta)
+        mem, _ = _stack_scan(cfg, params["encoder"]["layers"], mem, cose,
+                             sine, sc, {"causal": False}, q_chunk, False)
+        mem = L.rmsnorm(params["encoder"]["final_norm"], mem, cfg.norm_eps)
+        extras["memory"] = mem
+        x, kvs = _stack_scan(cfg, params["layers"], x, cos, sin, sc, extras,
+                             q_chunk, True, decoder_cross=True)
+    else:
+        x, kvs = _stack_scan(cfg, params["layers"], x, cos, sin, sc, extras,
+                             q_chunk, True)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x[:, -1] @ _lm_head(cfg, params).astype(dt)).astype(jnp.float32)
+
+    # assemble decode state: pad prompt KV out to max_len
+    state = init_decode_state(cfg, b, max_len)
+    state["pos"] = jnp.asarray(s, jnp.int32)
+    pad = ((0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0))
+    for slot, st in (kvs or {}).items():
+        state["layers"][slot]["k"] = jnp.pad(st["k"], pad)
+        state["layers"][slot]["v"] = jnp.pad(st["v"], pad)
+    if cfg.family == "encdec":
+        state = fill_cross_kv(cfg, params, state, extras["memory"], sc)
+    if cfg.family == "vlm" and "image_embeds" in extras:
+        state = fill_cross_kv(cfg, params, state, extras["image_embeds"], sc)
+    return logits, state
+
+
+def fill_cross_kv(cfg: ModelConfig, params, state, memory,
+                  sc: Constrainer = no_sc):
+    """Precompute per-layer cross-attention K/V from the memory (encoder
+    output or image patch embeddings) into the decode state."""
+    kinds = cfg.layer_kinds()
+    per = cfg.period()
+    layers = dict(state["layers"])
+    for i in range(per):
+        key = None
+        if cfg.family == "encdec":
+            key = "crossdec"
+        elif kinds[i] == "cross":
+            key = "cross"
+        if key is None:
+            continue
+        slot_p = jax.tree.map(lambda x: x, params["layers"][f"slot{i}"])
+
+        def per_layer(pl):
+            return L.cross_kv(cfg, pl[key], memory, sc)
+
+        mk, mv = jax.vmap(per_layer)(slot_p)   # (nper, B, Sm, KV, hd)
+        st = dict(layers[f"slot{i}"])
+        st["mk"], st["mv"] = mk, mv
+        layers[f"slot{i}"] = st
+    return {**state, "layers": layers}

@@ -1,0 +1,99 @@
+"""Request batching for GNN inference serving (the paper's deployment
+scenario: real-time recommendations over a large graph).
+
+Requests ask for the GNN output of a set of vertices.  The batcher groups
+pending requests into fixed-size batches (padding the tail), runs the
+model once per batch, and scatters results back per request — the
+standard high-throughput serving loop, sized so one batch fills the
+128-row PE array analogue (a vertex tile).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    vertex_ids: np.ndarray
+    t_submit: float = dataclasses.field(default_factory=time.monotonic)
+
+
+@dataclasses.dataclass
+class Response:
+    rid: int
+    outputs: np.ndarray
+    latency_s: float
+
+
+class GNNBatcher:
+    """infer_fn(vertex_ids: (B,) int32) -> (B, out_dim) array."""
+
+    def __init__(self, infer_fn: Callable, batch_size: int = 128,
+                 max_wait_s: float = 0.005):
+        self.infer_fn = infer_fn
+        self.batch_size = batch_size
+        self.max_wait_s = max_wait_s
+        self.queue: Deque[Request] = deque()
+        self.stats = {"batches": 0, "requests": 0, "padded": 0}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _form_batch(self) -> List[Request]:
+        batch: List[Request] = []
+        budget = self.batch_size
+        while self.queue and self.queue[0].vertex_ids.size <= budget:
+            r = self.queue.popleft()
+            budget -= r.vertex_ids.size
+            batch.append(r)
+        return batch
+
+    def step(self) -> List[Response]:
+        """Run one serving step; returns completed responses."""
+        if not self.queue:
+            return []
+        batch = self._form_batch()
+        if not batch:
+            # single oversized request: split it across steps
+            r = self.queue.popleft()
+            chunks = np.array_split(
+                r.vertex_ids, -(-r.vertex_ids.size // self.batch_size))
+            outs = [np.asarray(self.infer_fn(self._pad(c)))[: c.size]
+                    for c in chunks]
+            self.stats["batches"] += len(chunks)
+            self.stats["requests"] += 1
+            return [Response(r.rid, np.concatenate(outs),
+                             time.monotonic() - r.t_submit)]
+        ids = np.concatenate([r.vertex_ids for r in batch])
+        padded = self._pad(ids)
+        self.stats["padded"] += padded.size - ids.size
+        out = np.asarray(self.infer_fn(padded))[: ids.size]
+        self.stats["batches"] += 1
+        self.stats["requests"] += len(batch)
+        res = []
+        off = 0
+        now = time.monotonic()
+        for r in batch:
+            res.append(Response(r.rid, out[off:off + r.vertex_ids.size],
+                                now - r.t_submit))
+            off += r.vertex_ids.size
+        return res
+
+    def _pad(self, ids: np.ndarray) -> np.ndarray:
+        pad = self.batch_size - (ids.size % self.batch_size or
+                                 self.batch_size)
+        if pad:
+            ids = np.concatenate([ids, np.zeros(pad, ids.dtype)])
+        return ids
+
+    def drain(self) -> List[Response]:
+        out = []
+        while self.queue:
+            out.extend(self.step())
+        return out

@@ -1,0 +1,33 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM
+[arXiv:2404.06395]).  Pure functions of the step, jit-safe."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, peak_lr * cos)
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup -> Stable (constant) -> Decay (exponential-ish tail).
+    The decay phase is the last `decay_frac` of training."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = total * (1.0 - decay_frac)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - decay_start) /
+                    jnp.maximum(total - decay_start, 1), 0, 1)
+    decay = peak_lr * jnp.exp(jnp.log(final_frac) * prog)
+    lr = jnp.where(step < warmup, warm,
+                   jnp.where(step < decay_start, peak_lr, decay))
+    return lr
+
+
+def get_schedule(name: str, **kw):
+    return {"cosine": cosine_schedule, "wsd": wsd_schedule}[name], kw

@@ -1,0 +1,149 @@
+"""End-to-end system behaviour: the paper's full pipeline (graph in ->
+preprocess -> tiled EnGN inference -> results out) plus the dry-run and
+roofline machinery on a small in-process scale."""
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.engn import EnGNConfig, prepare_graph
+from repro.core.models import make_gnn_stack, init_stack, apply_stack
+from repro.graphs.degree import (apply_vertex_permutation,
+                                 degree_sort_permutation, permute_features,
+                                 unpermute_features)
+from repro.graphs.generate import make_dataset, random_features
+from repro.launch.analysis import (Roofline, model_flops_estimate,
+                                   parse_collective_bytes)
+from repro.launch.jaxpr_cost import traced_cost
+
+
+def test_full_engn_pipeline_cora_scale():
+    """Cora-shaped graph through the production path: degree relabelling
+    (TPU-DAVC) -> GCN normalisation -> tiled RER-SpMM backend -> 2-layer
+    GCN -> unpermute.  Must equal the naive segment path exactly."""
+    g, f, labels = make_dataset("cora", seed=0)
+    f = 64                      # keep the CPU run fast
+    x = random_features(g.num_vertices, f, seed=1)
+
+    # ---- optimised path (the EnGN production flow)
+    perm = degree_sort_permutation(g)
+    g_opt = apply_vertex_permutation(g, perm).gcn_normalized()
+    x_opt = permute_features(x, perm)
+    layers = make_gnn_stack("gcn", [f, 32, labels], backend="tiled",
+                            tile=128)
+    params = init_stack(layers, jax.random.key(0))
+    gd = prepare_graph(g_opt, layers[0].cfg)
+    y_opt = np.asarray(apply_stack(layers, params, gd,
+                                   jnp.asarray(x_opt)))
+    y_opt = unpermute_features(y_opt, perm)
+
+    # ---- reference path (edge-centric Algorithm 1)
+    g_ref = g.gcn_normalized()
+    ref_layers = make_gnn_stack("gcn", [f, 32, labels], backend="segment")
+    gd_ref = prepare_graph(g_ref, ref_layers[0].cfg)
+    y_ref = np.asarray(apply_stack(ref_layers, params, gd_ref,
+                                   jnp.asarray(x)))
+
+    np.testing.assert_allclose(y_opt, y_ref, rtol=1e-3, atol=1e-3)
+    assert y_opt.shape == (g.num_vertices, labels)
+
+
+def test_collective_parser_counts_bytes():
+    hlo = """
+ENTRY %main (a: f32[16]) -> f32[16] {
+  %ag = f32[64]{0} all-gather(f32[16]{0} %a), replica_groups={}
+  %ar = f32[16]{0} all-reduce(f32[16]{0} %a), to_apply=%add
+}
+"""
+    got = parse_collective_bytes(hlo)
+    assert got.get("all-gather") == 64 * 4
+    assert got.get("all-reduce") == 16 * 4
+
+
+def test_collective_parser_while_multiplier():
+    """Collectives inside a scanned (while) body count trip_count times."""
+    hlo = """
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar = f32[8]{0} all-reduce(f32[8]{0} %x), to_apply=%add
+}
+%cond (p: (s32[], f32[8])) -> pred[] {
+  %c = s32[] constant(12)
+  %lt = pred[] compare(%i, %c), direction=LT
+}
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %w = (s32[], f32[8]) while((s32[], f32[8]) %init), condition=%cond, body=%body
+}
+"""
+    got = parse_collective_bytes(hlo)
+    assert got.get("all-reduce") == 8 * 4 * 12
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(flops=197e12, hbm_bytes=819e9 * 2, collective_bytes=0,
+                 collectives={}, chips=1)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 2.0) < 1e-9
+    assert r.dominant == "memory"
+    assert abs(r.roofline_fraction() - 0.5) < 1e-9
+    d = r.as_dict()
+    assert d["dominant"] == "memory"
+
+
+def test_traced_cost_counts_matmul_flops():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    c = traced_cost(f, a, b)
+    assert c.flops == 2 * 128 * 256 * 64
+
+
+def test_traced_cost_scan_multiplies():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=5)
+        return y
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    c = traced_cost(f, x)
+    assert c.flops == 5 * 2 * 32 * 32 * 32
+
+
+def test_model_flops_estimate_moe_discount():
+    from repro.configs import get_config
+    dense = get_config("qwen2_72b")
+    moe = get_config("moonshot_v1_16b_a3b")
+    fd = model_flops_estimate(dense, "train", 128, 2)
+    fm = model_flops_estimate(moe, "train", 128, 2)
+    # moonshot activates ~3B of 16B params; flops must reflect that
+    from repro.nn.transformer import param_count
+    assert fm < 6 * param_count(moe) * 256
+    assert fd == pytest.approx(6 * param_count(dense) * 256, rel=1e-6)
+
+
+def test_dryrun_cell_records_exist_and_complete():
+    """The dry-run deliverable: all 40 cells x 2 meshes accounted for."""
+    import glob
+    import itertools
+    from pathlib import Path
+    from repro.configs import ARCH_IDS
+    from repro.launch import specs as SP
+
+    out = Path("experiments/dryrun")
+    if not out.exists():
+        pytest.skip("dry-run artifacts not generated in this checkout")
+    have = {}
+    for fn in glob.glob(str(out / "*.json")):
+        r = json.loads(Path(fn).read_text())
+        have[(r["arch"], r["shape"], r["mesh"])] = r["status"]
+    for arch, shape, mesh in itertools.product(
+            ARCH_IDS, SP.SHAPES, ["single", "multi"]):
+        st = have.get((arch, shape, mesh))
+        assert st in ("ok", "skipped"), (arch, shape, mesh, st)
+        # skips only where the shape is inapplicable
+        from repro.configs import get_config
+        ok, _ = SP.shape_applicable(get_config(arch), shape)
+        assert (st == "ok") == ok, (arch, shape, mesh, st)
