@@ -1,0 +1,19 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: check test bench serve-example dev-deps
+
+# tier-1 gate — run on every PR (see .github/workflows/ci.yml)
+check:
+	$(PYTHON) -m pytest -x -q
+
+test: check
+
+bench:
+	$(PYTHON) -m benchmarks.run
+
+serve-example:
+	$(PYTHON) examples/serve_gnn.py
+
+dev-deps:
+	$(PYTHON) -m pip install -r requirements-dev.txt

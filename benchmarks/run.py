@@ -15,7 +15,7 @@ from pathlib import Path
 from benchmarks import (bench_stage_breakdown, bench_edge_reorg,
                         bench_dim_sensitivity, bench_dasr, bench_tiling,
                         bench_davc, bench_scaling, bench_throughput,
-                        bench_ablation)
+                        bench_ablation, bench_serving)
 from benchmarks.common import rows
 
 BENCHES = {
@@ -28,6 +28,7 @@ BENCHES = {
     "fig16": bench_davc,                # DAVC hit rates
     "fig17": bench_scaling,             # PE/ring scaling
     "ablation": bench_ablation,         # technique-by-technique
+    "serving": bench_serving,           # serving engine req/s + cache
 }
 
 

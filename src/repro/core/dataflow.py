@@ -40,8 +40,11 @@ def ring_aggregate_dense(a_blocks: jnp.ndarray, x_shard: jnp.ndarray,
     init_acc = jnp.zeros(x_shard.shape, jnp.float32) if op == "sum" else \
         jnp.full(x_shard.shape, -jnp.inf, jnp.float32)
     # mark the carry as device-varying so the fori_loop carry types match
-    # after the ppermute (shard_map vma semantics)
-    init_acc = jax.lax.pvary(init_acc, (axis_name,))
+    # after the ppermute (shard_map vma semantics; jax < 0.6 has no
+    # varying-manual-axes tracking, so pvary is an identity there)
+    pvary = getattr(jax.lax, "pvary", None)
+    if pvary is not None:
+        init_acc = pvary(init_acc, (axis_name,))
 
     def body(k, carry):
         x_rot, acc = carry

@@ -57,6 +57,8 @@ class EnGNConfig:
     stage_order: str = "auto"
     backend: str = "segment"          # "segment" | "tiled" | "fused" | "ring"
     tile: int = 256                   # T for the blocked backend
+    ring_shards: Optional[int] = None  # ring: devices in the ring (default all)
+    ring_axis: str = "ring"            # ring: mesh axis name
     dtype: Any = jnp.float32
 
 
@@ -147,9 +149,10 @@ class EnGNLayer:
                                       op=cfg.aggregate_op)
             return y[:n]
         if cfg.backend == "ring":
-            from repro.core.dataflow import ring_aggregate_dense
-            return ring_aggregate_dense(graph["dense_shards"], feat,
-                                        graph["axis"], op=cfg.aggregate_op)
+            n = graph["n"]
+            pad_n = graph["ring_meta"]["padded"]
+            xf = jnp.zeros((pad_n, feat.shape[1]), feat.dtype).at[:n].set(feat)
+            return graph["ring_fn"](graph["dense_shards"], xf)[:n]
         raise ValueError(cfg.backend)
 
 
@@ -179,5 +182,24 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
         d["block_col"] = jnp.asarray(bcol)
         d["blocks_meta"] = {"q": b.q, "padded": b.padded_vertices,
                             "order": order, "tile": b.tile}
+        return d
+    if cfg.backend == "ring":
+        # Pod-scale RER (DESIGN.md C2): the adjacency is dense-sharded
+        # into (P, P, n_loc, n_loc) ring blocks; vertex features rotate
+        # around the device ring while each device reduces its dst rows.
+        from repro.core.dataflow import (make_ring_aggregate,
+                                         shard_adjacency_for_ring)
+        from repro.distributed.sharding import ring_mesh
+        if cfg.aggregate_op == "mean":
+            raise ValueError("ring backend supports sum/max aggregation")
+        mesh = ring_mesh(cfg.ring_shards, cfg.ring_axis)
+        p = mesh.devices.size
+        shards = shard_adjacency_for_ring(g.dense_adjacency(), p)
+        d["dense_shards"] = jnp.asarray(shards)
+        d["axis"] = cfg.ring_axis
+        d["ring_meta"] = {"shards": p, "padded": p * shards.shape[-1],
+                          "mesh": mesh}
+        d["ring_fn"] = make_ring_aggregate(mesh, cfg.ring_axis,
+                                           op=cfg.aggregate_op)
         return d
     raise ValueError(cfg.backend)

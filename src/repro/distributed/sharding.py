@@ -22,6 +22,21 @@ def mesh_shape_dict(mesh: Mesh) -> Dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
+def ring_mesh(num_shards: Optional[int] = None,
+              axis: str = "ring") -> Mesh:
+    """1-D device mesh for the RER ring dataflow (DESIGN.md C2).
+
+    Defaults to all local devices; a smaller `num_shards` takes a prefix
+    (useful for the 1-device degenerate ring in tests and CPU serving).
+    """
+    devs = jax.devices()
+    p = num_shards or len(devs)
+    if p > len(devs):
+        raise ValueError(f"ring of {p} shards needs {p} devices, "
+                         f"have {len(devs)}")
+    return Mesh(np.asarray(devs[:p]), (axis,))
+
+
 def make_rules(mesh: Mesh, seq_sharded: bool = True) -> Dict[str, object]:
     """Adapt DEFAULT_RULES to the mesh at hand (drop missing axes)."""
     names = set(mesh.axis_names)

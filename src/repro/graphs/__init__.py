@@ -3,10 +3,12 @@ from repro.graphs.format import COOGraph, CSRGraph, BlockedAdjacency, coo_to_csr
 from repro.graphs.generate import rmat_graph, dataset_stats, make_dataset
 from repro.graphs.partition import grid_partition, tile_schedule_order
 from repro.graphs.degree import degree_sort_permutation, apply_vertex_permutation
+from repro.graphs.subgraph import Subgraph, SubgraphExtractor, extract_khop
 
 __all__ = [
     "COOGraph", "CSRGraph", "BlockedAdjacency", "coo_to_csr", "coo_to_blocked",
     "rmat_graph", "dataset_stats", "make_dataset",
     "grid_partition", "tile_schedule_order",
     "degree_sort_permutation", "apply_vertex_permutation",
+    "Subgraph", "SubgraphExtractor", "extract_khop",
 ]

@@ -1,0 +1,8 @@
+"""GNN inference serving: continuous batching, L-hop subgraph inference,
+degree-aware result caching (DESIGN.md S7)."""
+from repro.serving.batcher import GNNBatcher, Request, Response
+from repro.serving.cache import DegreeAwareCache
+from repro.serving.engine import GNNServingEngine, ServingConfig
+
+__all__ = ["GNNBatcher", "Request", "Response", "DegreeAwareCache",
+           "GNNServingEngine", "ServingConfig"]

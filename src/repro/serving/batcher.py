@@ -1,11 +1,19 @@
-"""Request batching for GNN inference serving (the paper's deployment
-scenario: real-time recommendations over a large graph).
+"""Continuous request batching for GNN inference serving (DESIGN.md S7).
 
-Requests ask for the GNN output of a set of vertices.  The batcher groups
-pending requests into fixed-size batches (padding the tail), runs the
-model once per batch, and scatters results back per request — the
-standard high-throughput serving loop, sized so one batch fills the
-128-row PE array analogue (a vertex tile).
+Requests ask for the GNN output of a set of vertices.  Unlike the classic
+fixed-batch loop (pull whole requests until the next one doesn't fit —
+which permanently stalls the queue head whenever a request is larger than
+the batch), admission here is *continuous*: every step fills exactly one
+`batch_size` budget, slicing the head request if it only partially fits.
+A request's response is emitted once all of its slices have been served,
+so oversized requests stream through over several steps while small
+requests keep riding along in the leftover slots.
+
+Within a batch, vertex ids are coalesced: requests for overlapping
+frontiers (hub vertices again — zipf traffic) collapse to one inference
+row each, and results are scattered back per request.  The batcher tracks
+queue-delay and end-to-end latency percentiles (p50/p99), which
+`benchmarks/bench_serving.py` reports against requests/sec.
 """
 from __future__ import annotations
 
@@ -22,6 +30,11 @@ class Request:
     rid: int
     vertex_ids: np.ndarray
     t_submit: float = dataclasses.field(default_factory=time.monotonic)
+    # internal continuous-batching state
+    consumed: int = 0                 # ids already admitted to a batch
+    delivered: int = 0                # ids whose outputs have arrived
+    chunks: List[np.ndarray] = dataclasses.field(default_factory=list)
+    t_first_batch: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -29,71 +42,142 @@ class Response:
     rid: int
     outputs: np.ndarray
     latency_s: float
+    queue_delay_s: float = 0.0        # submit -> first batch admission
 
 
 class GNNBatcher:
-    """infer_fn(vertex_ids: (B,) int32) -> (B, out_dim) array."""
+    """infer_fn(vertex_ids: (B,) int32) -> (B, out_dim) array.
+
+    `batch_size` is the fixed inference batch (one vertex tile — the
+    128-row PE array analogue); `max_wait_s` bounds how long a
+    non-full batch may wait for more arrivals when stepping with
+    ``force=False``.
+    """
 
     def __init__(self, infer_fn: Callable, batch_size: int = 128,
-                 max_wait_s: float = 0.005):
+                 max_wait_s: float = 0.005, coalesce: bool = True,
+                 pad: bool = True):
         self.infer_fn = infer_fn
         self.batch_size = batch_size
         self.max_wait_s = max_wait_s
+        self.coalesce = coalesce
+        # pad=True keeps infer_fn's input shape fixed at batch_size (one
+        # compile for simple jitted infer_fns).  Callers that manage
+        # shapes themselves (the serving engine buckets subgraph shapes)
+        # pass pad=False so padding rows never reach the cache/model.
+        self.pad = pad
         self.queue: Deque[Request] = deque()
-        self.stats = {"batches": 0, "requests": 0, "padded": 0}
+        self.stats: Dict[str, int] = {"batches": 0, "requests": 0,
+                                      "padded": 0, "coalesced": 0,
+                                      "split_requests": 0}
+        self._latencies: List[float] = []
+        self._queue_delays: List[float] = []
 
+    # -- admission ---------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _form_batch(self) -> List[Request]:
-        batch: List[Request] = []
-        budget = self.batch_size
-        while self.queue and self.queue[0].vertex_ids.size <= budget:
-            r = self.queue.popleft()
-            budget -= r.vertex_ids.size
-            batch.append(r)
-        return batch
+    def pending_vertices(self) -> int:
+        return sum(r.vertex_ids.size - r.consumed for r in self.queue)
 
-    def step(self) -> List[Response]:
-        """Run one serving step; returns completed responses."""
+    def _admit(self, now: float) -> List[Request]:
+        """Fill one batch budget, slicing the head request if needed.
+        Returns the requests that contributed ids to this batch."""
+        budget = self.batch_size
+        admitted: List[Request] = []
+        while self.queue and budget > 0:
+            r = self.queue[0]
+            if r.t_first_batch is None:
+                r.t_first_batch = now
+                self._queue_delays.append(now - r.t_submit)
+            remaining = r.vertex_ids.size - r.consumed
+            take = min(remaining, budget)
+            if take < remaining and r.consumed == 0:
+                self.stats["split_requests"] += 1
+            r.consumed += take
+            budget -= take
+            admitted.append(r)
+            if r.consumed == r.vertex_ids.size:
+                self.queue.popleft()
+        return admitted
+
+    # -- one serving step --------------------------------------------------
+    def step(self, force: bool = True) -> List[Response]:
+        """Run one batch; returns the responses that completed.
+
+        With ``force=False`` a non-full batch is held back until the
+        oldest request has waited `max_wait_s` (continuous-serving loop);
+        the default serves immediately.
+        """
         if not self.queue:
             return []
-        batch = self._form_batch()
-        if not batch:
-            # single oversized request: split it across steps
-            r = self.queue.popleft()
-            chunks = np.array_split(
-                r.vertex_ids, -(-r.vertex_ids.size // self.batch_size))
-            outs = [np.asarray(self.infer_fn(self._pad(c)))[: c.size]
-                    for c in chunks]
-            self.stats["batches"] += len(chunks)
-            self.stats["requests"] += 1
-            return [Response(r.rid, np.concatenate(outs),
-                             time.monotonic() - r.t_submit)]
-        ids = np.concatenate([r.vertex_ids for r in batch])
-        padded = self._pad(ids)
-        self.stats["padded"] += padded.size - ids.size
-        out = np.asarray(self.infer_fn(padded))[: ids.size]
-        self.stats["batches"] += 1
-        self.stats["requests"] += len(batch)
-        res = []
-        off = 0
         now = time.monotonic()
-        for r in batch:
-            res.append(Response(r.rid, out[off:off + r.vertex_ids.size],
-                                now - r.t_submit))
-            off += r.vertex_ids.size
-        return res
+        if not force and self.pending_vertices() < self.batch_size \
+                and now - self.queue[0].t_submit < self.max_wait_s:
+            return []
 
-    def _pad(self, ids: np.ndarray) -> np.ndarray:
-        pad = self.batch_size - (ids.size % self.batch_size or
-                                 self.batch_size)
-        if pad:
-            ids = np.concatenate([ids, np.zeros(pad, ids.dtype)])
-        return ids
+        # steps are synchronous, so every request enters with
+        # delivered == consumed; the new slice is [delivered:consumed)
+        admitted = self._admit(now)
+        ids = np.concatenate(
+            [r.vertex_ids[r.delivered:r.consumed] for r in admitted])
+        assert ids.size <= self.batch_size
+
+        if ids.size:
+            if self.coalesce:
+                uniq, inv = np.unique(ids, return_inverse=True)
+                self.stats["coalesced"] += ids.size - uniq.size
+            else:
+                uniq, inv = ids, np.arange(ids.size)
+            pad = self.batch_size - uniq.size if self.pad else 0
+            self.stats["padded"] += pad
+            batch_ids = np.concatenate(
+                [uniq, np.zeros(pad, uniq.dtype)]) if pad else uniq
+            out = np.asarray(self.infer_fn(batch_ids))[inv]
+            self.stats["batches"] += 1
+        else:                      # only empty requests were admitted
+            out = np.zeros((0, 0), np.float32)
+
+        # scatter outputs back and emit completed responses
+        responses: List[Response] = []
+        off = 0
+        done = time.monotonic()
+        for r in admitted:
+            k = r.consumed - r.delivered
+            r.chunks.append(out[off:off + k])
+            r.delivered += k
+            off += k
+            if r.delivered == r.vertex_ids.size:
+                self.stats["requests"] += 1
+                lat = done - r.t_submit
+                self._latencies.append(lat)
+                responses.append(Response(
+                    r.rid, np.concatenate(r.chunks), lat,
+                    (r.t_first_batch or done) - r.t_submit))
+        return responses
 
     def drain(self) -> List[Response]:
-        out = []
+        out: List[Response] = []
         while self.queue:
-            out.extend(self.step())
+            out.extend(self.step(force=True))
         return out
+
+    # -- telemetry ---------------------------------------------------------
+    def reset_stats(self):
+        for k in self.stats:
+            self.stats[k] = 0
+        self._latencies.clear()
+        self._queue_delays.clear()
+
+    def latency_stats(self) -> Dict[str, float]:
+        """p50/p99 end-to-end latency and mean queue delay (seconds)."""
+        if not self._latencies:
+            return {"count": 0, "p50_s": 0.0, "p99_s": 0.0,
+                    "mean_queue_delay_s": 0.0}
+        lat = np.sort(np.asarray(self._latencies))
+        return {
+            "count": len(lat),
+            "p50_s": float(lat[len(lat) // 2]),
+            "p99_s": float(lat[min(int(len(lat) * 0.99), len(lat) - 1)]),
+            "mean_queue_delay_s": float(np.mean(self._queue_delays)),
+        }

@@ -1,0 +1,116 @@
+"""Degree-aware result cache — the serving-level DAVC (paper S4.2).
+
+The ASIC's DAVC pins cache lines for high-degree vertices because hub
+vertices dominate edge traffic (S3.2: top-20% of vertices touch 50-85% of
+edges).  The same skew shows up in serving traffic: popular entities are
+requested over and over, and their L-hop neighbourhoods are the most
+expensive to recompute (hubs have the largest frontiers).  So the serving
+cache keeps the ASIC's two-tier structure:
+
+  * a *reserved* region holding the final-layer embeddings of the top-K
+    highest-degree vertices — written once, never evicted (the paper's
+    "reserved lines determined by offline static analysis");
+  * an LRU region for everything else.
+
+`core/davc.py` simulates the hardware cache on the aggregate-stage access
+stream; this module is the deployable analogue over request streams.
+Entries are whole embedding rows, so a hit skips the entire L-hop
+extract + multi-layer forward for that vertex.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+class DegreeAwareCache:
+    """Two-tier (pinned hubs + LRU) embedding cache.
+
+    capacity:       total number of vertex entries.
+    degrees:        (N,) vertex degrees; picks the pinned set.
+    reserved_frac:  fraction of `capacity` reserved for the highest-degree
+                    vertices (0.0 = plain LRU, 1.0 = pinned-only).
+    """
+
+    def __init__(self, capacity: int, degrees: Optional[np.ndarray] = None,
+                 reserved_frac: float = 0.5):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        n_res = int(capacity * reserved_frac)
+        if degrees is None:
+            n_res = 0
+        self.capacity = capacity
+        self.lru_capacity = capacity - n_res
+        order = np.argsort(-np.asarray(degrees), kind="stable") \
+            if degrees is not None else np.zeros(0, np.int64)
+        self.pinned_ids = frozenset(int(v) for v in order[:n_res])
+        self._pinned: Dict[int, np.ndarray] = {}
+        self._lru: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0,
+                      "pinned_hits": 0}
+        self._dim: Optional[int] = None
+
+    def __len__(self) -> int:
+        return len(self._pinned) + len(self._lru)
+
+    # -- read -------------------------------------------------------------
+    def lookup(self, ids: np.ndarray) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Batch probe: returns (hit_mask (B,), out (B, dim) with hit rows
+        filled).  `out` is None while the cache is empty (dim unknown)."""
+        ids = np.asarray(ids)
+        mask = np.zeros(ids.shape[0], bool)
+        if self._dim is None:
+            self.stats["misses"] += int(ids.shape[0])
+            return mask, None
+        out = np.zeros((ids.shape[0], self._dim), np.float32)
+        for i, v in enumerate(ids.tolist()):
+            row = self._pinned.get(v)
+            if row is not None:
+                self.stats["pinned_hits"] += 1
+            elif v in self._lru:
+                row = self._lru[v]
+                self._lru.move_to_end(v)
+            if row is None:
+                self.stats["misses"] += 1
+                continue
+            mask[i] = True
+            out[i] = row
+            self.stats["hits"] += 1
+        return mask, out
+
+    # -- write ------------------------------------------------------------
+    def insert(self, ids: np.ndarray, values: np.ndarray):
+        """Store embedding rows; pinned vertices go to the reserved region
+        (never evicted), the rest to the LRU (evicting oldest)."""
+        values = np.asarray(values)
+        self._dim = int(values.shape[1])
+        for v, row in zip(np.asarray(ids).tolist(), values):
+            if v in self.pinned_ids:
+                self._pinned[v] = np.array(row, np.float32)
+                continue
+            if self.lru_capacity <= 0:
+                continue
+            if v in self._lru:
+                self._lru.move_to_end(v)
+            self._lru[v] = np.array(row, np.float32)
+            if len(self._lru) > self.lru_capacity:
+                self._lru.popitem(last=False)
+                self.stats["evictions"] += 1
+
+    # -- admin ------------------------------------------------------------
+    def hit_rate(self) -> float:
+        total = self.stats["hits"] + self.stats["misses"]
+        return self.stats["hits"] / total if total else 0.0
+
+    def reset_stats(self):
+        for k in self.stats:
+            self.stats[k] = 0
+
+    def clear(self):
+        """Drop all entries (e.g. after a model/parameter update makes
+        cached embeddings stale); stats are kept."""
+        self._pinned.clear()
+        self._lru.clear()
+        self._dim = None

@@ -1,0 +1,205 @@
+"""End-to-end GNN serving engine (DESIGN.md S7).
+
+Ties the serving stack together: requests enter the continuous
+`GNNBatcher`; each batch probes the `DegreeAwareCache` for already-served
+vertices; cache misses are answered by extracting the L-hop
+in-neighbourhood of the miss set (`graphs/subgraph.py`) and running the
+full multi-layer EnGN stack over just that subgraph — true per-request
+GNN inference rather than a row lookup into a precomputed table.
+
+Per-batch subgraphs have data-dependent shapes, which would force one XLA
+compile per distinct (|V|, |E|).  The engine pads both to power-of-two
+buckets (padding edges carry weight 0 and point at a padded dummy vertex,
+so sum-aggregation is unaffected), keeping the number of compiled
+programs logarithmic in batch size.  Bucketing is only applied when every
+layer uses sum aggregation; other ops fall back to exact eager execution.
+
+The model stack must use the "segment" aggregation backend: the engine
+feeds each layer a per-batch edge-list graph dict, and segment is the
+backend that consumes (src, dst, val) directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.format import COOGraph
+from repro.graphs.subgraph import SubgraphExtractor
+from repro.serving.batcher import GNNBatcher, Request, Response
+from repro.serving.cache import DegreeAwareCache
+
+
+@dataclasses.dataclass
+class ServingConfig:
+    batch_size: int = 128
+    max_wait_s: float = 0.005
+    num_hops: Optional[int] = None    # default: one hop per model layer
+    fanout: Optional[int] = None      # per-hop neighbour sampling cap
+    cache_capacity: int = 0           # 0 disables the result cache
+    cache_reserved_frac: float = 0.5  # DAVC reserved-line fraction
+    coalesce: bool = True
+    bucketing: bool = True            # pad subgraphs to pow2 shape buckets
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+class GNNServingEngine:
+    """Serve vertex-embedding requests over a (normalised) graph.
+
+    graph:  the full COOGraph, already normalised for the model (e.g.
+            `gcn_normalized()` for GCN stacks).
+    x:      (N, F) input features (host array; rows are gathered per
+            subgraph).
+    layers/params: an EnGN stack from `core.models.make_gnn_stack` /
+            `init_stack`, segment backend.
+    """
+
+    def __init__(self, graph: COOGraph, x: np.ndarray, layers, params,
+                 config: Optional[ServingConfig] = None):
+        config = config if config is not None else ServingConfig()
+        bad = [l.name for l in layers if l.cfg.backend != "segment"]
+        if bad:
+            raise ValueError(
+                f"serving requires segment-backend layers, got non-segment "
+                f"backend on {bad} (the engine feeds per-batch edge-list "
+                f"graph dicts that only the segment backend consumes)")
+        self.graph = graph
+        self.x = np.asarray(x)
+        self.layers = layers
+        self.params = params
+        self.config = config
+        self.num_hops = config.num_hops or len(layers)
+        self.extractor = SubgraphExtractor(graph)
+        self.cache: Optional[DegreeAwareCache] = None
+        if config.cache_capacity > 0:
+            self.cache = DegreeAwareCache(
+                config.cache_capacity, graph.degrees(),
+                config.cache_reserved_frac)
+        # pad=False: the engine buckets subgraph shapes itself, and
+        # padding ids must not reach the cache (phantom probes of a real
+        # vertex would inflate the hit rate and trigger spurious work)
+        self.batcher = GNNBatcher(self._infer_ids, config.batch_size,
+                                  config.max_wait_s, config.coalesce,
+                                  pad=False)
+        self._can_bucket = config.bucketing and all(
+            l.cfg.aggregate_op == "sum" for l in layers)
+        self._compiled: Dict = {}
+        self.stats = {"subgraphs": 0, "subgraph_vertices": 0,
+                      "subgraph_edges": 0, "compiles": 0}
+
+    # -- public API --------------------------------------------------------
+    def submit(self, rid: int, vertex_ids: np.ndarray):
+        ids = np.asarray(vertex_ids, np.int32)
+        if ids.size == 0:
+            raise ValueError(f"request {rid}: vertex_ids is empty")
+        if ids.min() < 0 or ids.max() >= self.graph.num_vertices:
+            raise ValueError(
+                f"request {rid}: vertex ids must be in "
+                f"[0, {self.graph.num_vertices}), got "
+                f"[{ids.min()}, {ids.max()}]")
+        self.batcher.submit(Request(rid, ids))
+
+    def step(self, force: bool = True) -> List[Response]:
+        return self.batcher.step(force=force)
+
+    def drain(self) -> List[Response]:
+        return self.batcher.drain()
+
+    def reset_telemetry(self):
+        """Zero all counters (cache *contents* and compiled programs are
+        kept) — call between warm-up and measured traffic."""
+        self.batcher.reset_stats()
+        if self.cache is not None:
+            self.cache.reset_stats()
+        for k in self.stats:
+            self.stats[k] = 0
+
+    def telemetry(self) -> Dict:
+        out = {"batcher": dict(self.batcher.stats),
+               "latency": self.batcher.latency_stats(),
+               "engine": dict(self.stats)}
+        if self.cache is not None:
+            out["cache"] = dict(self.cache.stats,
+                                hit_rate=self.cache.hit_rate())
+        return out
+
+    # -- inference path (called by the batcher, one batch at a time) -------
+    def _infer_ids(self, ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(ids, np.int32)
+        if self.cache is not None:
+            mask, out = self.cache.lookup(ids)
+        else:
+            mask, out = np.zeros(ids.size, bool), None
+        miss = np.unique(ids[~mask])
+        if miss.size == 0:
+            return out
+        y = self._run_subgraph(miss)                      # (|miss|, H)
+        if self.cache is not None:
+            self.cache.insert(miss, y)
+        if out is None:
+            out = np.zeros((ids.size, y.shape[1]), np.float32)
+        rows = ~mask
+        out[rows] = y[np.searchsorted(miss, ids[rows])]
+        return out
+
+    def _run_subgraph(self, seeds: np.ndarray) -> np.ndarray:
+        sub = self.extractor.extract(seeds, self.num_hops,
+                                     self.config.fanout)
+        g = sub.graph
+        self.stats["subgraphs"] += 1
+        self.stats["subgraph_vertices"] += g.num_vertices
+        self.stats["subgraph_edges"] += g.num_edges
+        xs = self.x[sub.vertices]
+        if not self._can_bucket:
+            gd = {"n": g.num_vertices, "src": jnp.asarray(g.src),
+                  "dst": jnp.asarray(g.dst), "val": jnp.asarray(g.weights())}
+            y = xs
+            for layer, p in zip(self.layers, self.params):
+                y = layer.apply(p, gd, jnp.asarray(y))
+            return np.asarray(y[:sub.num_seeds])
+
+        # pow2-bucketed shapes, best-fit reuse: prefer the smallest
+        # already-compiled bucket that fits (padded compute is cheaper
+        # than a fresh XLA compile); floored so small miss-sets (cache
+        # hot) share one bucket instead of compiling per shrinking shape
+        n_need, e_need = g.num_vertices + 1, max(g.num_edges, 1)
+        fits = [(n, e) for (n, e) in self._compiled
+                if n >= n_need and e >= e_need]
+        if fits:
+            n_pad, e_pad = min(fits, key=lambda ne: ne[0] * ne[1])
+        else:
+            n_pad = max(_next_pow2(n_need), 256)
+            e_pad = max(_next_pow2(e_need), 1024)
+        dummy = n_pad - 1
+        src = np.full(e_pad, dummy, np.int32)
+        dst = np.full(e_pad, dummy, np.int32)
+        val = np.zeros(e_pad, np.float32)        # padding edges weigh 0
+        src[:g.num_edges] = g.src
+        dst[:g.num_edges] = g.dst
+        val[:g.num_edges] = g.weights()
+        xf = np.zeros((n_pad, xs.shape[1]), np.float32)
+        xf[:xs.shape[0]] = xs
+
+        key = (n_pad, e_pad)
+        fn = self._compiled.get(key)
+        if fn is None:
+            fn = jax.jit(partial(self._stack_fn, n_pad))
+            self._compiled[key] = fn
+            self.stats["compiles"] += 1
+        y = np.asarray(fn(jnp.asarray(src), jnp.asarray(dst),
+                          jnp.asarray(val), jnp.asarray(xf)))
+        return y[:sub.num_seeds]
+
+    def _stack_fn(self, n_pad, src, dst, val, xf):
+        gd = {"n": n_pad, "src": src, "dst": dst, "val": val}
+        y = xf
+        for layer, p in zip(self.layers, self.params):
+            y = layer.apply(p, gd, y)
+        return y

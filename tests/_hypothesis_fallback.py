@@ -1,0 +1,108 @@
+"""Minimal deterministic stand-in for the `hypothesis` API surface the
+test-suite uses, so `pytest -x -q` passes from a clean checkout where
+hypothesis is not installed (see requirements-dev.txt for the real thing).
+
+Only what the tests need is implemented: `given`, `settings`, and the
+strategies `integers`, `booleans`, `sampled_from`, `builds`, `floats`,
+`lists`.  `given` draws `max_examples` pseudo-random examples from a
+seeded generator, so runs are reproducible; there is no shrinking.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        items = list(seq)
+        return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            k = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(k)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def builds(fn, *args, **kwargs) -> _Strategy:
+        def draw(rng):
+            a = [s.example(rng) for s in args]
+            kw = {k: s.example(rng) for k, s in kwargs.items()}
+            return fn(*a, **kw)
+        return _Strategy(draw)
+
+
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Records max_examples on the wrapped function (deadline etc. are
+    accepted and ignored)."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies_pos, **strategies_kw):
+    def deco(fn):
+        # NOTE: deliberately no functools.wraps — pytest must see a
+        # zero-argument test, not `fn`'s strategy parameters (it would
+        # treat them as fixtures).
+        def wrapper():
+            # read from `wrapper`: `@settings` is usually stacked above
+            # `@given` and therefore annotates the wrapper, not `fn`
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            # cap: the fallback has no shrinker, keep CI time bounded
+            n = min(n, 25)
+            # crc32, not hash(): str hashing is randomized per process
+            # (PYTHONHASHSEED) and would break example reproducibility
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                ex_pos = [s.example(rng) for s in strategies_pos]
+                ex_kw = {k: s.example(rng)
+                         for k, s in strategies_kw.items()}
+                try:
+                    fn(*ex_pos, **ex_kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: args={ex_pos} "
+                        f"kwargs={ex_kw}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        # `settings` may be applied above `given`; re-expose the marker
+        wrapper._fallback_max_examples = getattr(
+            fn, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+        return wrapper
+    return deco

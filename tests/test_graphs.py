@@ -2,7 +2,11 @@
 tiling schedule + I/O model.  Property-based via hypothesis."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # clean checkout: vendored fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.dasr import dasr_decide, predicted_speedup
 from repro.core.davc import simulate_davc
@@ -252,3 +256,72 @@ def test_rmat_deterministic():
     g2 = rmat_graph(100, 500, seed=42)
     np.testing.assert_array_equal(g1.src, g2.src)
     np.testing.assert_array_equal(g1.dst, g2.dst)
+
+
+# ---------------------------------------------------------------- subgraph
+def test_subgraph_extraction_invariants():
+    from repro.graphs.subgraph import SubgraphExtractor
+    g = rmat_graph(120, 900, seed=8).gcn_normalized()
+    ex = SubgraphExtractor(g)
+    seeds = np.array([3, 40, 3, 99], np.int32)      # duplicate seed
+    sub = ex.extract(seeds, num_hops=2)
+    # seeds dedupe to the leading local ids, in first-occurrence order
+    assert sub.num_seeds == 3
+    np.testing.assert_array_equal(sub.vertices[:3], [3, 40, 99])
+    # local ids are a consistent relabelling of global ids
+    assert sub.graph.num_vertices == sub.vertices.size
+    assert sub.graph.src.max(initial=-1) < sub.graph.num_vertices
+    # every subgraph edge exists in the full graph with the same weight
+    full = {(int(s), int(d)): float(v)
+            for s, d, v in zip(g.src, g.dst, g.weights())}
+    for s, d, v in zip(sub.graph.src, sub.graph.dst, sub.graph.weights()):
+        key = (int(sub.vertices[s]), int(sub.vertices[d]))
+        assert key in full
+        np.testing.assert_allclose(v, full[key], rtol=1e-6)
+    # in-edges of every seed are complete (1 hop of a 2-hop closure)
+    for seed in (3, 40, 99):
+        want = ((g.dst == seed)).sum()
+        got = (sub.vertices[sub.graph.dst] == seed).sum()
+        assert got == want
+
+
+def test_subgraph_inference_matches_full_graph():
+    """L-hop closure exactness: running the L-layer stack on the
+    extracted subgraph reproduces full-graph outputs at the seeds."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.engn import prepare_graph
+    from repro.core.models import make_gnn_stack, init_stack, apply_stack
+    from repro.graphs.subgraph import SubgraphExtractor
+    from repro.graphs.generate import random_features
+
+    g = rmat_graph(200, 1500, seed=9).gcn_normalized()
+    x = random_features(200, 8, seed=1)
+    layers = make_gnn_stack("gcn", [8, 16, 4])
+    params = init_stack(layers, jax.random.key(0))
+    full = np.asarray(apply_stack(
+        layers, params, prepare_graph(g, layers[0].cfg), jnp.asarray(x)))
+
+    sub = SubgraphExtractor(g).extract(
+        np.array([5, 17, 111], np.int32), num_hops=len(layers))
+    ys = np.asarray(apply_stack(
+        layers, params, prepare_graph(sub.graph, layers[0].cfg),
+        jnp.asarray(x[sub.vertices])))
+    np.testing.assert_allclose(ys[:sub.num_seeds], full[[5, 17, 111]],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_subgraph_fanout_bounds_expansion():
+    from repro.graphs.subgraph import SubgraphExtractor
+    g = rmat_graph(500, 8000, seed=10).gcn_normalized()
+    ex = SubgraphExtractor(g)
+    seeds = np.array([0, 1], np.int32)
+    exact = ex.extract(seeds, num_hops=2)
+    sampled = ex.extract(seeds, num_hops=2, fanout=3)
+    # sampled frontier never exceeds fanout in-edges per expanded vertex
+    dst_counts = np.bincount(sampled.graph.dst,
+                             minlength=sampled.graph.num_vertices)
+    expanded = np.unique(sampled.graph.dst)
+    assert (dst_counts[expanded] <= 3).all()
+    assert sampled.graph.num_vertices <= exact.graph.num_vertices
+    assert sampled.num_seeds == 2

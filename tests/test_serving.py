@@ -1,8 +1,11 @@
-"""GNN serving: request batching, padding accounting, oversized splits."""
+"""GNN serving: continuous batching, coalescing, oversized-request
+streaming, the degree-aware result cache, subgraph extraction, and the
+end-to-end engine."""
 import numpy as np
 import pytest
 
 from repro.serving.batcher import GNNBatcher, Request
+from repro.serving.cache import DegreeAwareCache
 
 
 def _echo_infer(ids):
@@ -31,13 +34,119 @@ def test_batcher_groups_requests():
 
 
 def test_batcher_oversized_request_split():
+    """An oversized request streams through successive batches and its
+    response is emitted once the last slice completes."""
     b = GNNBatcher(_echo_infer, batch_size=4)
     ids = np.arange(11, dtype=np.int32)
     b.submit(Request(7, ids))
-    res = b.step()
-    assert len(res) == 1
+    assert b.step() == []              # slices 1 and 2: not complete yet
+    assert b.step() == []
+    res = b.step()                     # final slice completes the request
+    assert len(res) == 1 and res[0].rid == 7
     np.testing.assert_allclose(res[0].outputs[:, 0], ids)
     assert b.stats["batches"] == 3     # ceil(11/4)
+    assert b.stats["split_requests"] == 1
+    assert not b.queue
+
+
+def test_batcher_oversized_head_does_not_stall_queue():
+    """Regression for the head-of-queue stall: an oversized head request
+    must not block the requests behind it forever — everything drains,
+    and small requests ride in the oversized request's leftover slots."""
+    b = GNNBatcher(_echo_infer, batch_size=4)
+    b.submit(Request(0, np.arange(10, dtype=np.int32)))    # oversized
+    b.submit(Request(1, np.array([90, 91], np.int32)))
+    b.submit(Request(2, np.array([80], np.int32)))
+    res = b.drain()
+    assert sorted(r.rid for r in res) == [0, 1, 2]
+    out = {r.rid: r.outputs for r in res}
+    np.testing.assert_allclose(out[0][:, 0], np.arange(10))
+    np.testing.assert_allclose(out[1][:, 0], [90, 91])
+    np.testing.assert_allclose(out[2][:, 0], [80])
+    # 13 vertices / budget 4 -> 4 batches, no vertex computed twice
+    assert b.stats["batches"] == 4
+    assert not b.queue
+
+
+def test_batcher_coalesces_overlapping_requests():
+    """Duplicate vertices across requests in one batch collapse to a
+    single inference row; responses still see their own copies."""
+    calls = []
+
+    def infer(ids):
+        calls.append(np.array(ids))
+        return _echo_infer(ids)
+
+    b = GNNBatcher(infer, batch_size=8)
+    b.submit(Request(0, np.array([5, 1, 5], np.int32)))
+    b.submit(Request(1, np.array([1, 5, 2], np.int32)))
+    res = b.step()
+    assert len(res) == 2
+    np.testing.assert_allclose(res[0].outputs[:, 0], [5, 1, 5])
+    np.testing.assert_allclose(res[1].outputs[:, 0], [1, 5, 2])
+    assert b.stats["coalesced"] == 3           # 6 ids -> 3 unique
+    # the unique ids (plus padding) went to infer exactly once
+    assert len(calls) == 1
+    assert set(calls[0][:3].tolist()) == {1, 2, 5}
+
+
+def test_batcher_latency_stats():
+    b = GNNBatcher(_echo_infer, batch_size=4)
+    for i in range(6):
+        b.submit(Request(i, np.array([i], np.int32)))
+    b.drain()
+    ls = b.latency_stats()
+    assert ls["count"] == 6
+    assert 0.0 <= ls["p50_s"] <= ls["p99_s"]
+    assert ls["mean_queue_delay_s"] >= 0.0
+    b.reset_stats()
+    assert b.latency_stats()["count"] == 0
+    assert b.stats["batches"] == 0
+
+
+# ------------------------------------------------------------------ cache
+def _rows(ids, dim=3):
+    ids = np.asarray(ids, np.int64)
+    return np.stack([ids * (k + 1) for k in range(dim)], 1).astype(
+        np.float32)
+
+
+def test_cache_hit_miss_and_eviction():
+    deg = np.array([9, 1, 1, 1, 1], np.int64)    # vertex 0 is the hub
+    c = DegreeAwareCache(capacity=3, degrees=deg, reserved_frac=0.34)
+    assert c.pinned_ids == {0}                   # 1 reserved line
+    mask, out = c.lookup(np.array([0, 1]))
+    assert not mask.any() and out is None        # cold cache
+    c.insert(np.array([0, 1, 2]), _rows([0, 1, 2]))
+    mask, out = c.lookup(np.array([0, 1, 2, 3]))
+    assert mask.tolist() == [True, True, True, False]
+    np.testing.assert_allclose(out[1], _rows([1])[0])
+    # LRU capacity is 2 (3 - 1 reserved): inserting 3 and 4 evicts 1
+    # (oldest non-pinned; 2 was refreshed by the lookup above)
+    c.insert(np.array([3]), _rows([3]))
+    assert c.stats["evictions"] == 1
+    mask, _ = c.lookup(np.array([1, 2, 3]))
+    assert mask.tolist() == [False, True, True]
+    # the pinned hub is never evicted no matter the churn
+    for v in range(10, 30):
+        c.insert(np.array([v]), _rows([v]))
+    mask, out = c.lookup(np.array([0]))
+    assert mask[0] and c.stats["pinned_hits"] >= 1
+    np.testing.assert_allclose(out[0], _rows([0])[0])
+    assert 0.0 < c.hit_rate() < 1.0
+    c.clear()
+    mask, out = c.lookup(np.array([0]))
+    assert not mask.any() and out is None
+
+
+def test_cache_plain_lru_when_no_reservation():
+    c = DegreeAwareCache(capacity=2, degrees=np.arange(10),
+                         reserved_frac=0.0)
+    assert not c.pinned_ids
+    c.insert(np.array([1, 2, 3]), _rows([1, 2, 3]))   # 1 evicted
+    mask, _ = c.lookup(np.array([1, 2, 3]))
+    assert mask.tolist() == [False, True, True]
+    assert c.stats["evictions"] == 1
 
 
 def test_batcher_drain():
@@ -74,3 +183,123 @@ def test_batcher_end_to_end_with_gnn():
     res = b.drain()
     np.testing.assert_allclose(res[0].outputs, full[[3, 14, 15]], rtol=1e-5)
     np.testing.assert_allclose(res[1].outputs, full[[60]], rtol=1e-5)
+
+
+# ----------------------------------------------------------------- engine
+def _engine_fixture(cache_capacity=0, fanout=None, batch_size=32):
+    import jax
+    import jax.numpy as jnp
+    from repro.core.engn import prepare_graph
+    from repro.core.models import make_gnn_stack, init_stack, apply_stack
+    from repro.graphs.generate import rmat_graph, random_features
+    from repro.serving.engine import GNNServingEngine, ServingConfig
+
+    g = rmat_graph(300, 2400, seed=0).gcn_normalized()
+    x = random_features(300, 8, seed=1)
+    layers = make_gnn_stack("gcn", [8, 16, 4])
+    params = init_stack(layers, jax.random.key(0))
+    full = np.asarray(apply_stack(
+        layers, params, prepare_graph(g, layers[0].cfg), jnp.asarray(x)))
+    eng = GNNServingEngine(
+        g, x, layers, params,
+        ServingConfig(batch_size=batch_size, cache_capacity=cache_capacity,
+                      fanout=fanout))
+    return eng, full
+
+
+def test_engine_end_to_end_matches_full_graph():
+    """2-layer EnGN served through subgraph extraction == full-graph
+    inference, including oversized and overlapping requests."""
+    eng, full = _engine_fixture()
+    rng = np.random.default_rng(0)
+    want = {}
+    for rid in range(25):
+        ids = rng.integers(0, 300, int(rng.integers(1, 50))).astype(np.int32)
+        want[rid] = ids
+        eng.submit(rid, ids)
+    res = eng.drain()
+    assert len(res) == 25
+    for r in res:
+        np.testing.assert_allclose(r.outputs, full[want[r.rid]],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_engine_cache_consistent_and_hits():
+    """With the result cache on, repeated requests hit the cache and the
+    served outputs stay identical to the uncached full-graph answer."""
+    eng, full = _engine_fixture(cache_capacity=128)
+    ids = np.array([7, 3, 250, 3], np.int32)
+    eng.submit(0, ids)
+    first = eng.drain()[0].outputs
+    np.testing.assert_allclose(first, full[ids], rtol=1e-4, atol=1e-5)
+    eng.submit(1, ids)
+    second = eng.drain()[0].outputs
+    np.testing.assert_allclose(second, first)
+    assert eng.cache.stats["hits"] > 0
+    assert eng.telemetry()["cache"]["hit_rate"] > 0.0
+
+
+def test_engine_fanout_sampling_runs():
+    """Sampled extraction (approximate) still serves every request with
+    finite outputs of the right shape."""
+    eng, full = _engine_fixture(fanout=4)
+    eng.submit(0, np.arange(40, dtype=np.int32))
+    res = eng.drain()
+    assert res[0].outputs.shape == (40, 4)
+    assert np.isfinite(res[0].outputs).all()
+
+
+def test_engine_telemetry_reset():
+    eng, _ = _engine_fixture(cache_capacity=64)
+    eng.submit(0, np.array([1, 2, 3], np.int32))
+    eng.drain()
+    assert eng.telemetry()["engine"]["subgraphs"] >= 1
+    eng.reset_telemetry()
+    tel = eng.telemetry()
+    assert tel["engine"]["subgraphs"] == 0
+    assert tel["batcher"]["batches"] == 0
+    assert tel["cache"]["hits"] == 0
+
+
+def test_engine_cache_sees_no_padding_probes():
+    """Regression: batch padding must not reach the cache — distinct
+    never-repeated requests (vertex 0 never asked for) report hit rate
+    0, not phantom hits from padded id-0 rows."""
+    eng, _ = _engine_fixture(cache_capacity=256, batch_size=32)
+    for rid in range(8):
+        ids = np.arange(1 + rid * 30, 1 + (rid + 1) * 30, dtype=np.int32)
+        eng.submit(rid, ids)
+    eng.drain()
+    assert eng.cache.stats["hits"] == 0
+    assert eng.cache.hit_rate() == 0.0
+    assert eng.telemetry()["batcher"]["padded"] == 0
+
+
+def test_engine_rejects_invalid_requests():
+    eng, _ = _engine_fixture()
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(0, np.array([], np.int32))
+    with pytest.raises(ValueError, match=r"\[0, 300\)"):
+        eng.submit(1, np.array([5, 999], np.int32))
+    with pytest.raises(ValueError, match=r"\[0, 300\)"):
+        eng.submit(2, np.array([-1], np.int32))
+
+
+def test_batcher_empty_request_serves_empty_response():
+    b = GNNBatcher(_echo_infer, batch_size=4)
+    b.submit(Request(0, np.zeros(0, np.int32)))
+    res = b.drain()
+    assert len(res) == 1 and res[0].outputs.shape[0] == 0
+
+
+def test_engine_rejects_non_segment_backend():
+    import jax
+    from repro.core.models import make_gnn_stack, init_stack
+    from repro.graphs.generate import rmat_graph, random_features
+    from repro.serving.engine import GNNServingEngine
+
+    g = rmat_graph(40, 200, seed=0).gcn_normalized()
+    layers = make_gnn_stack("gcn", [8, 4], backend="tiled", tile=16)
+    params = init_stack(layers, jax.random.key(0))
+    with pytest.raises(ValueError, match="segment-backend"):
+        GNNServingEngine(g, random_features(40, 8, 1), layers, params)

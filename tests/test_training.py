@@ -4,7 +4,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # clean checkout: vendored fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.configs import get_smoke
 from repro.core.models import make_gnn_stack, init_stack, apply_stack
