@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, pick, scaled, time_fn
 from repro.core.engn import prepare_graph
 from repro.core.models import make_gnn
 from repro.graphs.degree import (apply_vertex_permutation,
@@ -25,8 +25,9 @@ HIDDEN = 16
 
 
 def run():
-    for ds in ("cora", "pubmed"):
-        g0, f, _ = make_dataset(ds, max_vertices=6000, max_edges=60000)
+    for ds in pick(("cora", "pubmed")):
+        mv, me = scaled(6000, 60000)
+        g0, f, _ = make_dataset(ds, max_vertices=mv, max_edges=me)
         f = min(f, 1024)
         x0 = random_features(g0.num_vertices, f, seed=0)
         perm = degree_sort_permutation(g0)
@@ -46,7 +47,7 @@ def run():
         ta = timed(g0, x0, "segment", "fau", "A_baseline")
         tb = timed(g0, x0, "segment", "auto", "B_dasr")
         tc = timed(g_re, x_re, "segment", "auto", "C_relabel")
-        td = timed(g_re, x_re, "tiled", "auto", "D_tiled")
+        td = timed(g_re, x_re, "blocked", "auto", "D_blocked")
         emit(f"ablation/{ds}/speedup_A_to_D", round(ta / td, 2),
              f"B/A={ta/tb:.2f} C/B={tb/tc:.2f} D/C={tc/td:.2f} "
              f"(CPU: D loses without an MXU; v5e model in fig10)")

@@ -6,8 +6,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
-from repro.core.dasr import dasr_decide, predicted_speedup
+from benchmarks.common import emit, pick, scaled, time_fn
+from repro.core.dasr import dasr_decide
 from repro.core.engn import prepare_graph
 from repro.core.models import make_gnn
 from repro.graphs.generate import make_dataset, random_features
@@ -21,8 +21,9 @@ CASES = [
 
 
 def run():
-    for ds, f, h in CASES:
-        g, _, _ = make_dataset(ds, max_vertices=6000, max_edges=60000)
+    for ds, f, h in pick(CASES, 2):
+        mv, me = scaled(6000, 60000)
+        g, _, _ = make_dataset(ds, max_vertices=mv, max_edges=me)
         g = g.gcn_normalized()
         x = jnp.asarray(random_features(g.num_vertices, f, seed=0))
         times = {}

@@ -9,9 +9,8 @@ relabelling, normalised to the dense ideal."""
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, pick, scaled, time_fn
 from repro.graphs.degree import (apply_vertex_permutation,
                                  degree_sort_permutation)
 from repro.graphs.format import coo_to_blocked
@@ -24,8 +23,9 @@ F = 64
 
 
 def run():
-    for ds in DATASETS:
-        g, _, _ = make_dataset(ds, max_vertices=4000, max_edges=40000)
+    for ds in pick(DATASETS):
+        mv, me = scaled(4000, 40000)
+        g, _, _ = make_dataset(ds, max_vertices=mv, max_edges=me)
         g_re = apply_vertex_permutation(g, degree_sort_permutation(g))
 
         for tag, graph in (("orig", g), ("reorg", g_re)):

@@ -15,7 +15,7 @@ import textwrap
 
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, pick, scaled, time_fn
 from repro.graphs.format import coo_to_blocked
 from repro.graphs.generate import rmat_graph, random_features
 from repro.kernels.rer_spmm import ops as spmm_ops
@@ -29,7 +29,8 @@ _RING = textwrap.dedent("""
     rng = np.random.default_rng(0)
     a = (rng.random((n, n)) < 0.05).astype(np.float32)
     x = rng.standard_normal((n, f)).astype(np.float32)
-    for p in (1, 2, 4, 8):
+    ps = tuple(int(p) for p in os.environ.get("RING_PS", "1,2,4,8").split(","))
+    for p in ps:
         mesh = jax.make_mesh((p,), ("ring",))
         blocks = jnp.asarray(shard_adjacency_for_ring(a, p))
         fn = jax.jit(make_ring_aggregate(mesh, "ring"))
@@ -42,9 +43,9 @@ _RING = textwrap.dedent("""
 
 
 def run():
-    g = rmat_graph(4096, 60000, seed=0).gcn_normalized()
-    x = None
-    for t in (64, 128, 256, 512):
+    nv, ne = scaled(4096, 60000)
+    g = rmat_graph(nv, ne, seed=0).gcn_normalized()
+    for t in pick((64, 128, 256, 512), 2):
         b = coo_to_blocked(g, t)
         xp = jnp.asarray(random_features(b.padded_vertices, 64, seed=0))
         blocks, brow, bcol = spmm_ops.prepare_blocks(
@@ -55,8 +56,10 @@ def run():
         emit(f"fig17a/tile_{t}/spmm_us", round(us, 1),
              f"nnzb={b.nnzb} density={b.density():.3f}")
 
+    from benchmarks import common
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
+    env["RING_PS"] = "1,2" if common.SMOKE else "1,2,4,8"
     r = subprocess.run([sys.executable, "-c", _RING], env=env,
                        capture_output=True, text=True, timeout=600)
     for line in r.stdout.splitlines():

@@ -8,7 +8,8 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks import common
+from benchmarks.common import emit, scaled
 from repro.core.models import init_stack, make_gnn_stack
 from repro.graphs.generate import (make_dataset, random_features,
                                    zipf_traffic)
@@ -24,8 +25,8 @@ def _serve(engine, requests):
 
 
 def run():
-    g, f, classes = make_dataset("pubmed", max_vertices=6000,
-                                 max_edges=50000)
+    mv, me = scaled(6000, 50000)
+    g, f, classes = make_dataset("pubmed", max_vertices=mv, max_edges=me)
     f = min(f, 64)
     x = random_features(g.num_vertices, f, seed=0)
     layers = make_gnn_stack("gcn", [f, 32, classes])
@@ -35,7 +36,7 @@ def run():
 
     rng = np.random.default_rng(0)
     sample = zipf_traffic(deg, seed=0)
-    n_req = 150
+    n_req = 30 if common.SMOKE else 150
 
     def traffic():
         return [sample(int(rng.integers(1, 16))) for _ in range(n_req)]

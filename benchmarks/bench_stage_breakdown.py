@@ -4,9 +4,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks import common
+from benchmarks.common import emit, pick, scaled, time_fn
 from repro.core.engn import segment_aggregate
 from repro.core.models import make_gnn
 from repro.graphs.generate import make_dataset, random_features
@@ -17,9 +17,10 @@ HIDDEN = 16
 
 
 def run():
-    for ds in DATASETS:
-        g, f, labels = make_dataset(ds, max_vertices=8000, max_edges=60000)
-        f = min(f, 512)
+    for ds in pick(DATASETS):
+        mv, me = scaled(8000, 60000)
+        g, f, labels = make_dataset(ds, max_vertices=mv, max_edges=me)
+        f = min(f, 128 if common.SMOKE else 512)
         x = jnp.asarray(random_features(g.num_vertices, f, seed=0))
         src, dst = jnp.asarray(g.src), jnp.asarray(g.dst)
         for model in MODELS:

@@ -1,0 +1,82 @@
+"""Tiled out-of-core executor (S5 / C7) — end-to-end streamed vs dense
+throughput, transfer/compute overlap from double buffering, and the
+streamed traffic counters, across Table-5 dataset sizes."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import SCALE, emit, pick, time_fn
+from repro.core.engn import prepare_graph
+from repro.core.models import make_gnn
+from repro.core.tiled import TiledExecutor
+from repro.graphs.generate import make_dataset, random_features
+
+HIDDEN = 32
+DATASETS = ("pubmed", "corafull", "reddit", "enwiki")
+
+
+def _layer_time_us(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return (time.perf_counter() - t0) * 1e6
+
+
+def run():
+    for ds in pick(DATASETS, 2):
+        g, f, _ = make_dataset(ds, **SCALE)
+        f = min(f, 256)
+        gn = g.gcn_normalized()
+        x = random_features(g.num_vertices, f, seed=0)
+
+        # dense device-resident reference (blocked RER-SpMM)
+        dense = make_gnn("gcn", f, HIDDEN, backend="blocked", tile=256)
+        params = dense.init(jax.random.key(0))
+        gd = prepare_graph(gn, dense.cfg)
+        t_dense = time_fn(jax.jit(lambda p, xx: dense.apply(p, gd, xx)),
+                          params, jnp.asarray(x))
+
+        # streamed out-of-core layer under a budget that would reject
+        # every dense path at this scale
+        budget = 8_000_000
+        tiled = make_gnn("gcn", f, HIDDEN, backend="tiled", tile=256)
+        tiled.cfg.device_budget_bytes = budget
+        gt = prepare_graph(gn, tiled.cfg)
+        meta = gt["tiled_meta"]
+        ex: TiledExecutor = gt["tiled_exec"]
+        tiled.apply(params, gt, x)               # warm the jit caches
+        ex.reset_stats()
+        t_tiled = _layer_time_us(lambda: tiled.apply(params, gt, x))
+        emit(f"tiled/{ds}/dense_us", round(t_dense, 1),
+             f"E={g.num_edges}")
+        emit(f"tiled/{ds}/stream_us", round(t_tiled, 1),
+             f"tile={meta['tile']} chunk={meta['chunk']} "
+             f"order={meta['order']} host_mb="
+             f"{meta['host_bytes'] / 1e6:.1f}")
+
+        s = ex.stats.as_dict()
+        edges_per_s = g.num_edges / (t_tiled / 1e6)
+        emit(f"tiled/{ds}/stream_edges_per_s", round(edges_per_s, 1),
+             f"h2d_mb={(s['h2d_tile_bytes'] + s['h2d_x_bytes']) / 1e6:.1f} "
+             f"d2h_mb={s['d2h_bytes'] / 1e6:.1f}")
+        emit(f"tiled/{ds}/x_reuse_hits", s["x_reuse_hits"],
+             f"loads={s['x_loads']} steps={s['steps']}")
+
+        # overlap ablation: double-buffered streaming vs serialised
+        # (aggregate at the hidden dim — the post-DASR streamed width)
+        xh = random_features(g.num_vertices, HIDDEN, seed=1)
+        agg_db = TiledExecutor(gn, tile=meta["tile"], chunk=meta["chunk"],
+                               double_buffer=True)
+        agg_sq = TiledExecutor(gn, tile=meta["tile"], chunk=meta["chunk"],
+                               double_buffer=False)
+        agg_db.aggregate(xh, "sum", order="column")   # warm both sides'
+        agg_sq.aggregate(xh, "sum", order="column")   # shared jit cache
+        t_db = _layer_time_us(lambda: agg_db.aggregate(xh, "sum",
+                                                       order="column"))
+        t_sq = _layer_time_us(lambda: agg_sq.aggregate(xh, "sum",
+                                                       order="column"))
+        emit(f"tiled/{ds}/overlap_gain", round(t_sq / max(t_db, 1.0), 3),
+             f"double_buffer={t_db:.0f}us serialized={t_sq:.0f}us "
+             f"(CPU: H2D is a copy; on TPU the DMA overlaps the MXU)")

@@ -3,10 +3,9 @@
 GCN on Table-5 dataset dimensions."""
 from __future__ import annotations
 
-from benchmarks.common import emit
+from benchmarks.common import emit, pick
 from repro.graphs.generate import DATASET_STATS
-from repro.graphs.partition import (io_cost, simulated_io_bytes,
-                                    tile_schedule_order)
+from repro.graphs.partition import simulated_io_bytes, tile_schedule_order
 
 HIDDEN = 16
 Q = 16          # intervals
@@ -18,7 +17,8 @@ def _layer_io(order: str, f: int, h: int, interval: int):
 
 
 def run():
-    for ds in ("cora", "pubmed", "nell", "corafull", "reddit", "enwiki"):
+    for ds in pick(("cora", "pubmed", "nell", "corafull", "reddit",
+                    "enwiki"), 2):
         v, e, f, labels = DATASET_STATS[ds]
         interval = -(-v // Q)
         # layer 1: F -> HIDDEN;  layer 2: HIDDEN -> labels

@@ -1,8 +1,10 @@
-"""Shared benchmark utilities: timing, CSV emission, dataset scaling."""
+"""Shared benchmark utilities: timing, CSV emission, dataset scaling,
+and the --smoke mode (tiny sizes, one repetition) the CI bench-smoke job
+runs to record the perf trajectory per PR."""
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List
+from typing import Callable, List, Sequence
 
 import jax
 import numpy as np
@@ -10,7 +12,33 @@ import numpy as np
 # CPU-hosted benches stay tractable by scaling Table-5 datasets down.
 SCALE = dict(max_vertices=20_000, max_edges=200_000)
 
+SMOKE = False
+_SMOKE_SCALE = dict(max_vertices=1500, max_edges=9000)
+
 _ROWS: List[str] = []
+
+
+def set_smoke(on: bool = True):
+    """Switch the module into smoke mode: every bench shrinks its
+    datasets (`scaled`/`pick`) and `time_fn` runs one repetition."""
+    global SMOKE
+    SMOKE = on
+    if on:
+        SCALE.update(_SMOKE_SCALE)
+
+
+def scaled(max_vertices: int, max_edges: int):
+    """Per-bench dataset caps, tightened further in smoke mode."""
+    if SMOKE:
+        return (min(max_vertices, _SMOKE_SCALE["max_vertices"]),
+                min(max_edges, _SMOKE_SCALE["max_edges"]))
+    return max_vertices, max_edges
+
+
+def pick(seq: Sequence, smoke_n: int = 1) -> list:
+    """The full sweep normally; the first `smoke_n` points in smoke."""
+    items = list(seq)
+    return items[:smoke_n] if SMOKE else items
 
 
 def emit(name: str, value, derived: str = ""):
@@ -25,6 +53,8 @@ def rows() -> List[str]:
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall time (us) of fn(*args) with block_until_ready."""
+    if SMOKE:
+        warmup, iters = min(warmup, 1), 1
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []

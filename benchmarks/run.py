@@ -1,6 +1,10 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig15]
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig15] [--smoke]
+
+`--smoke` shrinks every bench to tiny sizes with one repetition — the CI
+bench-smoke job runs it and uploads the CSV as an artifact so the perf
+trajectory is recorded per PR.
 
 Emits ``name,value,derived`` CSV rows (also saved to
 experiments/bench_results.csv).
@@ -14,8 +18,9 @@ from pathlib import Path
 
 from benchmarks import (bench_stage_breakdown, bench_edge_reorg,
                         bench_dim_sensitivity, bench_dasr, bench_tiling,
-                        bench_davc, bench_scaling, bench_throughput,
-                        bench_ablation, bench_serving)
+                        bench_tiled_exec, bench_davc, bench_scaling,
+                        bench_throughput, bench_ablation, bench_serving)
+from benchmarks import common
 from benchmarks.common import rows
 
 BENCHES = {
@@ -24,7 +29,8 @@ BENCHES = {
     "fig12": bench_edge_reorg,          # edge reorg / utilisation
     "fig13": bench_dim_sensitivity,     # dimension sensitivity
     "fig14": bench_dasr,                # DASR speedup
-    "fig15": bench_tiling,              # tiling schedule I/O
+    "fig15": bench_tiling,              # tiling schedule I/O (model)
+    "tiled": bench_tiled_exec,          # out-of-core tiled executor
     "fig16": bench_davc,                # DAVC hit rates
     "fig17": bench_scaling,             # PE/ring scaling
     "ablation": bench_ablation,         # technique-by-technique
@@ -36,7 +42,12 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated figure keys (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, one repetition (CI bench-smoke)")
     args = ap.parse_args()
+    if args.smoke:
+        common.set_smoke(True)
+        print("# smoke mode: tiny sizes, 1 repetition", flush=True)
     keys = [k for k in args.only.split(",") if k] or list(BENCHES)
 
     print("name,value,derived")

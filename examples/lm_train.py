@@ -12,7 +12,6 @@ import argparse
 import tempfile
 
 import jax
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import SyntheticTokenStream

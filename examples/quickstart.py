@@ -38,9 +38,9 @@ def main():
                             tile=256)
     params = init_stack(layers, jax.random.key(0))
     graph = prepare_graph(g, layers[0].cfg)
-    for i, l in enumerate(layers):
-        print(f"layer {i}: F={l.cfg.in_dim} H={l.cfg.out_dim} "
-              f"DASR order={l.dasr_order()}")
+    for i, layer in enumerate(layers):
+        print(f"layer {i}: F={layer.cfg.in_dim} H={layer.cfg.out_dim} "
+              f"DASR order={layer.dasr_order()}")
 
     y = apply_stack(layers, params, graph, jnp.asarray(x))
     y = unpermute_features(np.asarray(y), perm)

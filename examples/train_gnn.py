@@ -9,7 +9,6 @@ import tempfile
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.engn import prepare_graph

@@ -7,9 +7,16 @@ Every GNN is expressed as three stage functions over an edge-centric graph:
     update(prop_dst, acc, W_update)                -> prop'     (per vertex)
 
 `EnGNLayer` is the composable module: it owns the stage functions, the
-DASR decision (S5.2) and the aggregation backend (dense-tile Pallas kernel,
-segment reference, or pod-scale RER ring).  Models in core/models.py are
-instances of this class per Table 1.
+DASR decision (S5.2) and the aggregation backend (segment reference,
+device-resident blocked Pallas kernel, fused extract+aggregate, pod-scale
+RER ring, or the out-of-core streamed tiled executor).  Models in
+core/models.py are instances of this class per Table 1.
+
+Device-memory budget: when `EnGNConfig.device_budget_bytes` is set,
+`prepare_graph` estimates the device footprint of the requested backend
+and either spills to the streamed "tiled" backend (`auto_spill=True`,
+the default) or raises `DeviceBudgetExceeded` — graphs larger than one
+device run via core/tiled.py instead of OOMing.
 """
 from __future__ import annotations
 
@@ -21,7 +28,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graphs.format import COOGraph, coo_to_blocked, blocked_to_device
+from repro.core.tiled import (DeviceBudgetExceeded, TiledExecutor,
+                              dense_footprint_bytes)
+from repro.graphs.format import COOGraph, coo_to_blocked
 from repro.graphs.partition import tile_schedule_order
 
 
@@ -55,10 +64,20 @@ class EnGNConfig:
     # DASR: "auto" picks per Observation 1 / Eq. 6-7; "fau" forces
     # feature-extraction->aggregate->update; "afu" forces aggregate-first.
     stage_order: str = "auto"
-    backend: str = "segment"          # "segment" | "tiled" | "fused" | "ring"
-    tile: int = 256                   # T for the blocked backend
+    # "segment"  edge-centric reference (Algorithm 1)
+    # "blocked"  device-resident blocked RER-SpMM (Pallas on TPU)
+    # "fused"    blocked + extraction fused into the aggregate sweep
+    # "ring"     pod-scale RER over a device ring
+    # "tiled"    out-of-core streamed executor (core/tiled.py, C7)
+    backend: str = "segment"
+    tile: int = 256                   # T for the blocked/tiled backends
     ring_shards: Optional[int] = None  # ring: devices in the ring (default all)
     ring_axis: str = "ring"            # ring: mesh axis name
+    # device-memory budget for the dense paths; prepare_graph spills to
+    # the streamed tiled backend (auto_spill) or raises when exceeded
+    device_budget_bytes: Optional[int] = None
+    auto_spill: bool = True
+    tiled_chunk: int = 8              # tiles per streamed device step
     dtype: Any = jnp.float32
 
 
@@ -105,12 +124,16 @@ class EnGNLayer:
     # -- forward ----------------------------------------------------------
     def apply(self, params, graph, x: jnp.ndarray,
               aggregate_fn: Optional[Callable] = None) -> jnp.ndarray:
-        """graph: dict of device arrays from `prepare_graph`."""
+        """graph: dict from `prepare_graph` (device arrays, or the host
+        tile store when the effective backend is the streamed "tiled")."""
+        backend = graph.get("backend", self.cfg.backend)
+        if backend == "tiled" and aggregate_fn is None:
+            return self._apply_tiled(params, graph, x)
         agg = aggregate_fn or partial(self._aggregate, graph)
         linear_sum = (self.cfg.aggregate_op == "sum"
                       and type(self).feature_extraction
                       is EnGNLayer.feature_extraction)
-        if linear_sum and self.cfg.backend == "fused" \
+        if linear_sum and backend == "fused" \
                 and self.dasr_order() == "fau":
             # Fig. 8 stage overlap: extraction fused into the aggregate
             # sweep (P = X@W lives only in VMEM per tile)
@@ -130,15 +153,59 @@ class EnGNLayer:
         h = agg(tmp)                                    # A(XW)
         return self.update(params, x, h)
 
+    # -- streamed out-of-core path (core/tiled.py, DESIGN.md C7) ----------
+    def _tiled_stage_fns(self):
+        """Jitted stage functions, cached per layer instance so repeated
+        tiled batches (serving fallback) re-trace nothing: the jit cache
+        is keyed on these stable callables + the streamed shapes."""
+        fns = getattr(self, "_tiled_jit", None)
+        if fns is None:
+            fns = {
+                "extract": jax.jit(
+                    lambda p, xb: self.feature_extraction(p, xb)),
+                "update": jax.jit(
+                    lambda p, xb, ab: self.update(p, xb, ab)),
+                "extract_update": jax.jit(
+                    lambda p, xb, ab: self.update(
+                        p, xb, self.feature_extraction(p, ab))),
+            }
+            self._tiled_jit = fns
+        return fns
+
+    def _apply_tiled(self, params, graph, x) -> np.ndarray:
+        """Run the layer through the streamed executor: extraction rides
+        on the source-interval loads, aggregation follows the adaptive
+        tile schedule, and update streams per destination interval.
+        Operates on (and returns) host arrays by construction."""
+        cfg = self.cfg
+        ex: TiledExecutor = graph["tiled_exec"]
+        x = np.asarray(x, np.float32)
+        order = tile_schedule_order(cfg.in_dim, cfg.out_dim)
+        fns = self._tiled_stage_fns()
+        linear_sum = (cfg.aggregate_op == "sum"
+                      and type(self).feature_extraction
+                      is EnGNLayer.feature_extraction)
+        if linear_sum and self.dasr_order() == "afu":
+            ax = ex.aggregate(x, "sum", order=order,
+                              out_dim_hint=cfg.out_dim)       # (AX)
+            return ex.stream_map(
+                partial(fns["extract_update"], params), x, ax)
+        agg = ex.aggregate(
+            x, cfg.aggregate_op, order=order,
+            extract_fn=partial(fns["extract"], params),
+            extract_dim=cfg.out_dim, out_dim_hint=cfg.out_dim)
+        return ex.stream_map(partial(fns["update"], params), x, agg)
+
     # -- aggregation backends ---------------------------------------------
     def _aggregate(self, graph, feat: jnp.ndarray) -> jnp.ndarray:
         cfg = self.cfg
-        if cfg.backend == "segment":
+        backend = graph.get("backend", cfg.backend)
+        if backend == "segment":
             ev = feat[graph["src"]]
             if "val" in graph:
                 ev = ev * graph["val"][:, None]
             return segment_aggregate(ev, graph["dst"], graph["n"], cfg.aggregate_op)
-        if cfg.backend in ("tiled", "fused"):
+        if backend in ("blocked", "fused"):
             from repro.kernels.rer_spmm import ops as spmm_ops
             n = graph["n"]
             pad_n = graph["blocks_meta"]["padded"]
@@ -148,27 +215,68 @@ class EnGNLayer:
                                       q=graph["blocks_meta"]["q"],
                                       op=cfg.aggregate_op)
             return y[:n]
-        if cfg.backend == "ring":
+        if backend == "tiled":
+            # unreachable from apply() (it routes to _apply_tiled before
+            # binding _aggregate); a direct caller would get host arrays
+            # where every other backend returns device arrays
+            raise RuntimeError(
+                "the streamed tiled backend runs through "
+                "EnGNLayer._apply_tiled, not _aggregate")
+        if backend == "ring":
             n = graph["n"]
             pad_n = graph["ring_meta"]["padded"]
             xf = jnp.zeros((pad_n, feat.shape[1]), feat.dtype).at[:n].set(feat)
             return graph["ring_fn"](graph["dense_shards"], xf)[:n]
-        raise ValueError(cfg.backend)
+        raise ValueError(backend)
+
+
+def prepare_tiled(g: COOGraph, cfg: EnGNConfig,
+                  out_dim: Optional[int] = None,
+                  impl: Optional[str] = None) -> Dict[str, Any]:
+    """Build the graph dict for the streamed out-of-core backend: the
+    Q x Q edge-tile store stays in host memory; tile/chunk sizes are
+    fitted to the device budget for the layer's wider feature dim."""
+    h = out_dim if out_dim is not None else cfg.out_dim
+    ex = TiledExecutor(g, tile=cfg.tile, chunk=cfg.tiled_chunk,
+                       budget_bytes=cfg.device_budget_bytes, impl=impl,
+                       dim_hint=max(cfg.in_dim, h))
+    return {"n": g.num_vertices, "backend": "tiled", "tiled_exec": ex,
+            "tiled_meta": {"q": ex.store.q, "tile": ex.store.tile,
+                           "chunk": ex.chunk,
+                           "order": tile_schedule_order(cfg.in_dim, h),
+                           "host_bytes": ex.store.nbytes()}}
 
 
 def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
     """Host-side 'format converter': build the device-side graph dict for
-    the chosen backend, including the adaptive tile-schedule decision."""
-    d: Dict[str, Any] = {"n": g.num_vertices}
-    if cfg.backend == "segment":
+    the chosen backend, including the adaptive tile-schedule decision and
+    the device-budget spill to the streamed tiled backend."""
+    backend = cfg.backend
+    h = out_dim if out_dim is not None else cfg.out_dim
+    if cfg.device_budget_bytes and backend != "tiled":
+        need = dense_footprint_bytes(g.num_vertices, g.num_edges,
+                                     cfg.in_dim, h, backend,
+                                     tile=cfg.tile,
+                                     has_val=g.val is not None)
+        if need > cfg.device_budget_bytes:
+            if not cfg.auto_spill:
+                raise DeviceBudgetExceeded(
+                    f"backend {backend!r} needs ~{need} device bytes, "
+                    f"budget is {cfg.device_budget_bytes} (set "
+                    f"auto_spill=True or backend='tiled' to stream "
+                    f"tiles out-of-core)")
+            backend = "tiled"
+    if backend == "tiled":
+        return prepare_tiled(g, cfg, out_dim)
+    d: Dict[str, Any] = {"n": g.num_vertices, "backend": backend}
+    if backend == "segment":
         d["src"] = jnp.asarray(g.src)
         d["dst"] = jnp.asarray(g.dst)
         if g.val is not None:
             d["val"] = jnp.asarray(g.val)
         return d
-    if cfg.backend in ("tiled", "fused"):
+    if backend in ("blocked", "fused"):
         from repro.kernels.rer_spmm.ops import prepare_blocks
-        h = out_dim if out_dim is not None else cfg.out_dim
         # The adaptive order (Table 3) is recorded for the I/O analysis;
         # on TPU the kernel itself mandates the dst-stationary layout
         # (output tiles must be revisited consecutively), so the blocks
@@ -183,7 +291,7 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
         d["blocks_meta"] = {"q": b.q, "padded": b.padded_vertices,
                             "order": order, "tile": b.tile}
         return d
-    if cfg.backend == "ring":
+    if backend == "ring":
         # Pod-scale RER (DESIGN.md C2): the adjacency is dense-sharded
         # into (P, P, n_loc, n_loc) ring blocks; vertex features rotate
         # around the device ring while each device reduces its dst rows.
@@ -202,4 +310,4 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
         d["ring_fn"] = make_ring_aggregate(mesh, cfg.ring_axis,
                                            op=cfg.aggregate_op)
         return d
-    raise ValueError(cfg.backend)
+    raise ValueError(backend)

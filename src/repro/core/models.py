@@ -10,8 +10,6 @@
 """
 from __future__ import annotations
 
-from typing import Any, Dict
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -77,6 +75,12 @@ class RGCNLayer(EnGNLayer):
         }
 
     def apply(self, params, graph, x, aggregate_fn=None):
+        if graph.get("backend") == "tiled":
+            raise NotImplementedError(
+                "R-GCN needs per-relation edge aggregation and cannot "
+                "stream through the tiled executor; use the segment "
+                "backend (raise device_budget_bytes or pre-partition "
+                "the graph per relation)")
         n = graph["n"]
         src, dst, rel = graph["src"], graph["dst"], graph["rel"]
         # per-edge normalisation 1/c_{i,r} = 1/|N_i^r|
@@ -119,6 +123,11 @@ class GatedGCNLayer(EnGNLayer):
         }
 
     def apply(self, params, graph, x, aggregate_fn=None):
+        if graph.get("backend") == "tiled":
+            raise NotImplementedError(
+                "Gated-GCN's edge gate depends on both endpoints and "
+                "cannot stream through the tiled executor; use the "
+                "segment backend (raise device_budget_bytes)")
         n = graph["n"]
         src, dst = graph["src"], graph["dst"]
         # project once per vertex (N x F), gate per edge (E x F)
@@ -190,7 +199,7 @@ def make_gnn_stack(model: str, dims, backend: str = "segment",
 
 def init_stack(layers, key):
     keys = jax.random.split(key, len(layers))
-    return [l.init(k) for l, k in zip(layers, keys)]
+    return [layer.init(k) for layer, k in zip(layers, keys)]
 
 
 def apply_stack(layers, params, graph, x):

@@ -1,0 +1,436 @@
+"""Out-of-core tiled propagation executor (paper S5.1-S5.3, DESIGN.md C7).
+
+Every other aggregation backend materialises the full graph (or its
+blocked form) on device, which caps the graph size at device memory.
+This module is the paper's actual scalability story: the adjacency is
+grid-partitioned into a Q x Q grid of edge tiles that live in *host*
+memory (`graphs.partition.EdgeTileStore`), and the executor streams them
+host->device following the adaptive tile schedule (Table 3 / Eq. 8),
+accumulating partial destination results exactly as the RER array does:
+
+  * column-major (dst-stationary): the (T, d) accumulator for one
+    destination interval stays on device across its whole tile-row sweep
+    and is flushed to the host exactly once — the paper's Q x H writes;
+  * row-major (src-stationary): one source interval stays resident while
+    partial accumulators spill to the host after every tile — the
+    paper's Q^2 x H write term, reproduced as real D2H transfers.
+
+Double buffering (the C7 adaptation): while the device reduces chunk k,
+the host has already issued `jax.device_put` for chunk k+1, so on real
+hardware the tile DMA overlaps the MXU work (NeuraChip's decoupled
+fetch/compute, PAPERS.md).  `double_buffer=False` serialises the two for
+an overlap ablation (benchmarks/bench_tiled_exec.py).
+
+Duplicate-edge caveat (shared with the blocked backends): tiles are
+built with add-at, so multi-edges merge by summation before a max
+aggregation sees them; dedup edges first if exact multi-edge max
+semantics matter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from functools import partial
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.format import COOGraph
+from repro.graphs.partition import (EdgeTileStore, build_tile_store,
+                                    chunk_tile_row, tile_schedule_order)
+
+
+class DeviceBudgetExceeded(RuntimeError):
+    """A dense execution path needs more device memory than the budget."""
+
+
+# ----------------------------------------------------------------------
+# Footprint model: what each backend would place on device
+# ----------------------------------------------------------------------
+
+def dense_footprint_bytes(num_vertices: int, num_edges: int, in_dim: int,
+                          out_dim: int, backend: str = "segment",
+                          tile: int = 256, has_val: bool = True) -> int:
+    """Device bytes a *dense* (graph-resident) backend needs — the gate
+    that decides when to spill to the streamed tiled executor."""
+    n, e, f, h = num_vertices, num_edges, in_dim, out_dim
+    feat = 4 * n * (f + h)                    # resident X and H
+    if backend == "segment":
+        edges = e * (8 + (4 if has_val else 0))
+        return feat + edges + 4 * e * max(f, h)   # (E, d) gather buffer
+    if backend in ("blocked", "fused"):
+        q = -(-n // tile)
+        nnzb_ub = min(q * q, max(e, 1))
+        return feat + 4 * nnzb_ub * tile * tile
+    if backend == "ring":
+        return feat + 4 * n * n
+    raise ValueError(backend)
+
+
+def _step_bytes(tile: int, chunk: int, dim: int, x_cache: int) -> int:
+    """Device bytes one streaming step holds: double-buffered tile
+    chunks + the source-interval cache + the destination accumulator."""
+    return 4 * (2 * (chunk * tile * tile + chunk * tile * dim)
+                + x_cache * tile * dim
+                + 2 * tile * dim)
+
+
+def fit_tile_plan(budget_bytes: Optional[int], dim: int, tile: int = 256,
+                  chunk: int = 8, x_cache: int = 2) -> Tuple[int, int]:
+    """Largest (tile, chunk) whose streaming step footprint fits the
+    device budget."""
+    if not budget_bytes:
+        return tile, chunk
+    while _step_bytes(tile, chunk, dim, x_cache) > budget_bytes:
+        if chunk > 1:
+            chunk = chunk // 2
+        elif tile > 8:
+            tile = tile // 2
+        else:
+            raise DeviceBudgetExceeded(
+                f"budget {budget_bytes}B cannot hold even a single "
+                f"8x8 tile step at feature dim {dim}")
+    return tile, chunk
+
+
+# ----------------------------------------------------------------------
+# Per-chunk device kernels (einsum path; `impl` can route through the
+# Pallas rer_spmm kernel for TPU parity)
+# ----------------------------------------------------------------------
+
+@jax.jit
+def _chunk_step_sum(acc, blocks, xs):
+    # blocks (C, T, T) @ xs (C, T, d), reduced over the chunk -> (T, d)
+    return acc + jnp.einsum("ktu,kuf->tf", blocks, xs,
+                            preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def _chunk_step_max(acc, blocks, xs):
+    vals = jnp.where(blocks[..., None] != 0.0,
+                     blocks[..., None] * xs[:, None, :, :], -jnp.inf)
+    return jnp.maximum(acc, jnp.max(vals, axis=(0, 2)))
+
+
+@jax.jit
+def _finish_max(acc):
+    return jnp.where(jnp.isneginf(acc), 0.0, acc)
+
+
+@partial(jax.jit, static_argnames=("op", "impl", "q"))
+def _chunk_step_kernel(acc, blocks, xs, *, op, impl, q):
+    """Same chunk reduction expressed through the RER-SpMM kernel
+    dispatcher (Mosaic on TPU, tiled XLA elsewhere): the chunk is a
+    1-destination-interval block-sparse SpMM."""
+    from repro.kernels.rer_spmm import ops as spmm_ops
+    t = blocks.shape[1]
+    rows = jnp.zeros(q, jnp.int32)
+    cols = jnp.arange(q, dtype=jnp.int32)
+    y = spmm_ops.blocked_spmm(blocks, rows, cols,
+                              xs.reshape(q * t, xs.shape[-1]),
+                              q=q, op=op, impl=impl)[:t]
+    if op == "sum":
+        return acc + y
+    covered = (blocks != 0.0).any(axis=(0, 2))
+    return jnp.where(covered[:, None], jnp.maximum(acc, y), acc)
+
+
+# ----------------------------------------------------------------------
+# The executor
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TiledStats:
+    steps: int = 0
+    tiles: int = 0
+    h2d_tile_bytes: int = 0
+    h2d_x_bytes: int = 0
+    d2h_bytes: int = 0
+    x_loads: int = 0
+    x_reuse_hits: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class TiledExecutor:
+    """Streamed aggregate over a host-resident `EdgeTileStore`.
+
+    graph:        the COO graph to partition (tiles are built once and
+                  shared across layers / calls).
+    tile, chunk:  interval size T and tiles per device step; both are
+                  shrunk by `fit_tile_plan` when `budget_bytes` is set.
+    budget_bytes: device-memory budget the streaming step must respect.
+    impl:         None -> fused einsum step; "xla"/"pallas" -> route each
+                  chunk through the rer_spmm kernel dispatcher.
+    """
+
+    def __init__(self, graph: COOGraph, tile: int = 256, chunk: int = 8,
+                 budget_bytes: Optional[int] = None,
+                 impl: Optional[str] = None, double_buffer: bool = True,
+                 x_cache: int = 2, dim_hint: Optional[int] = None):
+        dim = dim_hint if dim_hint is not None else 128
+        tile, chunk = fit_tile_plan(budget_bytes, dim, tile, chunk, x_cache)
+        self.store: EdgeTileStore = build_tile_store(graph, tile)
+        self.chunk = chunk
+        self.budget_bytes = budget_bytes
+        self.impl = impl
+        self.double_buffer = double_buffer
+        self.x_cache_cap = max(2, x_cache)
+        self.stats = TiledStats()
+        self._xcache: OrderedDict = OrderedDict()
+
+    # -- public API ----------------------------------------------------
+    def reset_stats(self):
+        self.stats = TiledStats()
+
+    def effective_chunk(self, dim: int) -> int:
+        """Re-fit the chunk for this call's feature dim.  The tile is
+        fixed by the store, so only the chunk can shrink; if even a
+        single tile per step exceeds the budget the executor refuses
+        rather than silently overshooting — rebuild with a smaller tile
+        (or a wider `dim_hint`) in that case."""
+        if not self.budget_bytes:
+            return self.chunk
+        t, c = self.store.tile, self.chunk
+        while c > 1 and _step_bytes(t, c, dim, self.x_cache_cap) \
+                > self.budget_bytes:
+            c = c // 2
+        if _step_bytes(t, c, dim, self.x_cache_cap) > self.budget_bytes:
+            raise DeviceBudgetExceeded(
+                f"store tile {t} at feature dim {dim} exceeds the "
+                f"{self.budget_bytes}B budget even with chunk=1; "
+                f"rebuild the executor with dim_hint>={dim}")
+        return c
+
+    def aggregate(self, x: np.ndarray, op: str, order: str = "auto",
+                  extract_fn: Optional[Callable] = None,
+                  extract_dim: Optional[int] = None,
+                  out_dim_hint: Optional[int] = None) -> np.ndarray:
+        """A(x) (or A(extract(x))) streamed tile-by-tile; returns host
+        (N, d).  `order` follows the adaptive scheduler when "auto":
+        column-major iff F < 2H (Eq. 8), with F/H taken as the streamed
+        dim and `out_dim_hint`."""
+        x = np.ascontiguousarray(np.asarray(x, np.float32))
+        if x.shape[0] != self.store.num_vertices:
+            raise ValueError((x.shape, self.store.num_vertices))
+        d = extract_dim if extract_fn is not None else x.shape[1]
+        if order == "auto":
+            h = out_dim_hint if out_dim_hint is not None else d
+            order = tile_schedule_order(x.shape[1], h)
+        base_op = "sum" if op == "mean" else op
+        if base_op not in ("sum", "max"):
+            raise ValueError(op)
+        # extract_fn is called as-is: pass an already-jitted callable to
+        # avoid re-tracing per aggregate() call (EnGNLayer caches its
+        # jitted stage functions per layer instance)
+        ext = extract_fn
+        self._xcache = OrderedDict()
+        if order == "column":
+            out = self._sweep_column(x, base_op, ext, d)
+        elif order == "row":
+            out = self._sweep_row(x, base_op, ext, d)
+        else:
+            raise ValueError(order)
+        if op == "mean":
+            out = out / np.maximum(self.store.in_counts, 1.0)[:, None]
+        return out
+
+    def stream_map(self, fn: Callable, *arrays: np.ndarray) -> np.ndarray:
+        """Apply `fn` interval-by-interval on device (the update stage of
+        a tiled layer): slices of the host arrays stream through, results
+        stream back; only one interval is device-resident at a time.
+        Pass an already-jitted `fn` — it is invoked as-is."""
+        st = self.store
+        jfn = fn
+        outs: List[np.ndarray] = []
+        staged = tuple(jax.device_put(self._interval(a, 0)) for a in arrays)
+        for i in range(st.q):
+            cur = staged
+            if self.double_buffer and i + 1 < st.q:
+                staged = tuple(jax.device_put(self._interval(a, i + 1))
+                               for a in arrays)
+            y = jfn(*cur)
+            outs.append(np.asarray(y))
+            self.stats.d2h_bytes += outs[-1].nbytes
+            if not self.double_buffer and i + 1 < st.q:
+                staged = tuple(jax.device_put(self._interval(a, i + 1))
+                               for a in arrays)
+        return np.concatenate(outs)[:st.num_vertices]
+
+    # -- internals -----------------------------------------------------
+    def _interval(self, a: np.ndarray, j: int) -> np.ndarray:
+        t = self.store.tile
+        blk = a[j * t:(j + 1) * t]
+        if blk.shape[0] < t:
+            out = np.zeros((t,) + a.shape[1:], a.dtype)
+            out[:blk.shape[0]] = blk
+            return out
+        return blk
+
+    def _src_interval(self, x: np.ndarray, j: int, ext):
+        dev = self._xcache.get(j)
+        if dev is not None:
+            self.stats.x_reuse_hits += 1
+            return dev
+        hb = self._interval(x, j)
+        self.stats.h2d_x_bytes += hb.nbytes
+        self.stats.x_loads += 1
+        dev = jax.device_put(hb)
+        if ext is not None:
+            dev = ext(dev)
+        self._xcache[j] = dev
+        while len(self._xcache) > self.x_cache_cap:
+            self._xcache.popitem(last=False)
+        return dev
+
+    def _stage_chunk(self, idx: np.ndarray, x: np.ndarray, ext, chunk: int):
+        """Host->device for one chunk of tiles: the (C, T, T) tile stack
+        (padded to the fixed chunk width so one program is compiled) and
+        the (C, T, d) stack of their source intervals."""
+        st = self.store
+        t = st.tile
+        k = idx.size
+        assert k > 0, "chunks are built from non-empty tile lists"
+        # fresh buffer per stage: device_put may be zero-copy on CPU, so
+        # the staged chunk must not be overwritten while in flight
+        blocks = np.zeros((chunk, t, t), np.float32)
+        st.densify(idx, blocks)
+        self.stats.h2d_tile_bytes += blocks.nbytes
+        self.stats.tiles += k
+        blocks_dev = jax.device_put(blocks)
+        xs = [self._src_interval(x, int(j), ext) for j in st.block_col[idx]]
+        # pad with a repeat of the first interval: its tiles are zero, so
+        # it contributes nothing, and the chunk shape stays compile-stable
+        xs.extend(xs[0] for _ in range(chunk - k))
+        xs_dev = jnp.stack(xs)
+        return blocks_dev, xs_dev
+
+    def _chunk_step(self, acc, blocks_dev, xs_dev, op: str, chunk: int):
+        if self.impl in ("xla", "pallas"):
+            return _chunk_step_kernel(acc, blocks_dev, xs_dev, op=op,
+                                      impl=self.impl, q=chunk)
+        if op == "sum":
+            return _chunk_step_sum(acc, blocks_dev, xs_dev)
+        return _chunk_step_max(acc, blocks_dev, xs_dev)
+
+    def _sweep_column(self, x, op, ext, d) -> np.ndarray:
+        """dst-stationary: accumulator resident per destination interval,
+        source tiles stream in S-shape chunks."""
+        st = self.store
+        t, q = st.tile, st.q
+        chunk = self.effective_chunk(d)
+        out = np.zeros((st.padded_vertices, d), np.float32)
+        steps: List[Tuple[int, np.ndarray]] = []
+        for i in range(q):
+            for c in chunk_tile_row(st.row_tiles(i), chunk,
+                                    snake=(i % 2 == 1)):
+                steps.append((i, c))
+        if not steps:
+            return out[:st.num_vertices]
+
+        def init_acc():
+            if op == "max":
+                return jnp.full((t, d), -jnp.inf, jnp.float32)
+            return jnp.zeros((t, d), jnp.float32)
+
+        def flush(i, acc):
+            y = _finish_max(acc) if op == "max" else acc
+            h = np.asarray(y)
+            self.stats.d2h_bytes += h.nbytes
+            out[i * t:(i + 1) * t] = h
+
+        staged = self._stage_chunk(steps[0][1], x, ext, chunk)
+        acc = None
+        cur_row: Optional[int] = None
+        for s, (i, idx) in enumerate(steps):
+            blocks_dev, xs_dev = staged
+            if i != cur_row:
+                if cur_row is not None:
+                    flush(cur_row, acc)
+                acc = init_acc()
+                cur_row = i
+            if self.double_buffer and s + 1 < len(steps):
+                # issue the next H2D before dispatching compute: the
+                # transfer overlaps the reduction below (C7)
+                staged = self._stage_chunk(steps[s + 1][1], x, ext, chunk)
+            acc = self._chunk_step(acc, blocks_dev, xs_dev, op, chunk)
+            self.stats.steps += 1
+            if not self.double_buffer and s + 1 < len(steps):
+                jax.block_until_ready(acc)
+                staged = self._stage_chunk(steps[s + 1][1], x, ext, chunk)
+        flush(cur_row, acc)
+        return out[:st.num_vertices]
+
+    def _sweep_row(self, x, op, ext, d) -> np.ndarray:
+        """src-stationary: one source interval resident per column sweep;
+        each tile's partial accumulator spills to the host (the paper's
+        Q^2 x H write traffic, as real D2H transfers)."""
+        st = self.store
+        t, q = st.tile, st.q
+        fill = -np.inf if op == "max" else 0.0
+        out = np.full((st.padded_vertices, d), fill, np.float32)
+        steps: List[Tuple[int, int]] = []
+        for j in range(q):
+            tiles = st.col_tiles(j)
+            if j % 2 == 1:
+                tiles = tiles[::-1]
+            steps.extend((j, int(k)) for k in tiles)
+        if not steps:
+            return np.zeros((st.num_vertices, d), np.float32)
+
+        def stage(step):
+            j, k = step
+            blk_host = st.densify([k], np.zeros((1, t, t), np.float32))[0]
+            self.stats.h2d_tile_bytes += blk_host.nbytes
+            self.stats.tiles += 1
+            return (jax.device_put(blk_host),
+                    self._src_interval(x, j, ext))
+
+        staged = stage(steps[0])
+        for s, (j, k) in enumerate(steps):
+            blk_dev, x_dev = staged
+            if self.double_buffer and s + 1 < len(steps):
+                staged = stage(steps[s + 1])
+            part = self._tile_part(blk_dev, x_dev, op)
+            self.stats.steps += 1
+            hp = np.asarray(part)                 # partial spill (D2H)
+            self.stats.d2h_bytes += hp.nbytes
+            i = int(st.block_row[k])
+            rows = slice(i * t, (i + 1) * t)
+            if op == "sum":
+                out[rows] += hp
+            else:
+                out[rows] = np.maximum(out[rows], hp)
+            if not self.double_buffer and s + 1 < len(steps):
+                staged = stage(steps[s + 1])
+        if op == "max":
+            out = np.where(np.isneginf(out), 0.0, out)
+        return out[:st.num_vertices]
+
+    def _tile_part(self, blk_dev, x_dev, op: str):
+        if self.impl in ("xla", "pallas"):
+            # single-tile chunk through the rer_spmm dispatcher; the
+            # -inf/zero init makes the result exactly the raw partial
+            t, d = blk_dev.shape[0], x_dev.shape[1]
+            init = (jnp.full((t, d), -jnp.inf, jnp.float32) if op == "max"
+                    else jnp.zeros((t, d), jnp.float32))
+            return _chunk_step_kernel(init, blk_dev[None], x_dev[None],
+                                      op=op, impl=self.impl, q=1)
+        if op == "sum":
+            return _tile_part_sum(blk_dev, x_dev)
+        return _tile_part_max(blk_dev, x_dev)
+
+
+@jax.jit
+def _tile_part_sum(blk, xj):
+    return jnp.dot(blk, xj, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def _tile_part_max(blk, xj):
+    vals = jnp.where(blk[:, :, None] != 0.0,
+                     blk[:, :, None] * xj[None, :, :], -jnp.inf)
+    return jnp.max(vals, axis=1)     # keeps -inf: host merge is a max

@@ -7,7 +7,7 @@ restarts (checkpoint/elastic.py) reproduce the exact token stream — no
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict
 
 import numpy as np
 

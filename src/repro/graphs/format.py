@@ -12,7 +12,6 @@ import dataclasses
 from typing import Optional
 
 import numpy as np
-import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -181,9 +180,3 @@ def coo_to_blocked(g: COOGraph, tile: int, order: str = "column") -> BlockedAdja
         raise ValueError(f"unknown order {order!r}")
     return BlockedAdjacency(g.num_vertices, t, q, blocks[sort],
                             block_row[sort], block_col[sort])
-
-
-def blocked_to_device(b: BlockedAdjacency):
-    """Move the tiled adjacency to device arrays for the Pallas kernel."""
-    return (jnp.asarray(b.blocks), jnp.asarray(b.block_row),
-            jnp.asarray(b.block_col))

@@ -4,11 +4,16 @@
 fall into Q^2 shards.  `tile_schedule_order` implements the adaptive
 scheduler: column-major when F < 2H, else row-major, with S-shape reuse of
 the shared boundary tile between neighbouring columns/rows.
+
+`EdgeTileStore` is the host-resident form of the same Q x Q grid that the
+out-of-core executor (core/tiled.py, DESIGN.md C7) streams tile-by-tile:
+tiles never live on device all at once, so it also carries the per-row /
+per-column indexes the streaming schedules walk.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
@@ -82,6 +87,125 @@ def schedule_tiles(q: int, order: str, s_shape: bool = True):
     else:
         raise ValueError(order)
     return out
+
+
+# ----------------------------------------------------------------------
+# Host-resident tile store for out-of-core streaming (DESIGN.md C7)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EdgeTileStore:
+    """The Q x Q edge-tile grid, kept in host memory for streaming.
+
+    Same tile *content* as `BlockedAdjacency`, but tiles are stored
+    sparsely — per-tile edge lists in one flat edge array grouped by
+    tile (`edge_ptr`) — so the host footprint stays O(E) instead of
+    O(nnzb * T^2): a real out-of-core graph must not cost a thousand
+    times its edge list in host RAM.  Tiles are densified one streaming
+    chunk at a time by `densify` (multi-edges merge by summation, like
+    `coo_to_blocked`).  Indexed for the two streaming schedules of the
+    paper's tile scheduler:
+
+      * `row_tiles(i)`  — the non-empty tiles of destination interval i,
+        sorted by source interval (column-major / dst-stationary sweeps);
+      * `col_tiles(j)`  — the non-empty tiles of source interval j,
+        sorted by destination interval (row-major / src-stationary).
+
+    `in_counts` is the per-destination in-edge count (mean aggregation
+    divides by it after the streamed sum).
+    """
+    num_vertices: int
+    tile: int
+    q: int
+    block_row: np.ndarray           # (nnzb,) int32 dst interval
+    block_col: np.ndarray           # (nnzb,) int32 src interval
+    edge_ptr: np.ndarray            # (nnzb+1,) int64 — edges per tile
+    edge_li: np.ndarray             # (E,) int32 dst offset within tile
+    edge_lj: np.ndarray             # (E,) int32 src offset within tile
+    edge_w: np.ndarray              # (E,) float32 edge weight
+    in_counts: np.ndarray           # (N,) float32 in-edge counts
+    _row_ptr: np.ndarray            # (q+1,) indices into _row_order
+    _row_order: np.ndarray          # tiles sorted (row, col)
+    _col_ptr: np.ndarray            # (q+1,) indices into _col_order
+    _col_order: np.ndarray          # tiles sorted (col, row)
+
+    @property
+    def nnzb(self) -> int:
+        return int(self.block_row.shape[0])
+
+    @property
+    def padded_vertices(self) -> int:
+        return self.q * self.tile
+
+    def nbytes(self) -> int:
+        return int(self.edge_li.nbytes + self.edge_lj.nbytes
+                   + self.edge_w.nbytes + self.edge_ptr.nbytes
+                   + self.block_row.nbytes + self.block_col.nbytes)
+
+    def row_tiles(self, i: int) -> np.ndarray:
+        return self._row_order[self._row_ptr[i]:self._row_ptr[i + 1]]
+
+    def col_tiles(self, j: int) -> np.ndarray:
+        return self._col_order[self._col_ptr[j]:self._col_ptr[j + 1]]
+
+    def densify(self, tiles, out: np.ndarray) -> np.ndarray:
+        """Scatter the given tiles' edge lists into `out` (k, T, T)
+        dense buffers (zeroed here), one per tile, ready for upload."""
+        out[:len(tiles)] = 0.0
+        for c, k in enumerate(tiles):
+            lo, hi = self.edge_ptr[k], self.edge_ptr[k + 1]
+            np.add.at(out[c], (self.edge_li[lo:hi], self.edge_lj[lo:hi]),
+                      self.edge_w[lo:hi])
+        return out
+
+
+def _tile_index(keys: np.ndarray, q: int) -> Tuple[np.ndarray, np.ndarray]:
+    order = np.argsort(keys, kind="stable").astype(np.int64)
+    groups = keys[order] // q
+    ptr = np.searchsorted(groups, np.arange(q + 1))
+    return ptr.astype(np.int64), order
+
+
+def build_tile_store(g: COOGraph, tile: int) -> EdgeTileStore:
+    """Partition a COO graph into the host-side streaming tile store:
+    one argsort of the edge list by tile key — O(E log E), O(E) bytes."""
+    t = tile
+    q = -(-g.num_vertices // t)
+    bi = (g.dst // t).astype(np.int64)
+    bj = (g.src // t).astype(np.int64)
+    key = bi * q + bj
+    order = np.argsort(key, kind="stable")
+    key_sorted = key[order]
+    uniq, ptr_starts = np.unique(key_sorted, return_index=True)
+    edge_ptr = np.concatenate([ptr_starts,
+                               [key_sorted.size]]).astype(np.int64)
+    block_row = (uniq // q).astype(np.int32)
+    block_col = (uniq % q).astype(np.int32)
+    row = block_row.astype(np.int64)
+    col = block_col.astype(np.int64)
+    row_ptr, row_order = _tile_index(row * q + col, q)
+    col_ptr, col_order = _tile_index(col * q + row, q)
+    counts = np.bincount(g.dst, minlength=g.num_vertices).astype(np.float32)
+    return EdgeTileStore(
+        g.num_vertices, t, q, block_row, block_col, edge_ptr,
+        (g.dst[order] % t).astype(np.int32),
+        (g.src[order] % t).astype(np.int32),
+        g.weights()[order].astype(np.float32),
+        counts, row_ptr, row_order, col_ptr, col_order)
+
+
+def chunk_tile_row(tiles: Sequence[int], chunk: int,
+                   snake: bool = False) -> List[np.ndarray]:
+    """Split one interval's tile list into device-sized chunks, optionally
+    reversed (the S-shape snake: neighbouring outer-loop iterations walk
+    the inner axis in opposite directions, so the boundary source interval
+    is still resident when the next sweep starts — Fig. 8)."""
+    tiles = np.asarray(tiles, np.int64)
+    if snake:
+        tiles = tiles[::-1]
+    if tiles.size == 0:
+        return []
+    return [tiles[k:k + chunk] for k in range(0, tiles.size, chunk)]
 
 
 def simulated_io_bytes(q: int, order: str, f: int, h: int, interval: int,

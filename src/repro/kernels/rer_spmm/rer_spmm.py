@@ -20,8 +20,6 @@ operands so BlockSpec index_maps can follow the block-sparse structure.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -28,7 +28,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ARCH_IDS, get_config
 from repro.distributed.sharding import (Constrainer, make_rules,
                                         param_pspecs)
-from repro.launch.analysis import (model_flops_estimate, parse_collective_bytes,
+from repro.launch.analysis import (model_flops_estimate,
                                    roofline_from_compiled)
 from repro.launch.jaxpr_cost import traced_cost
 from repro.launch.mesh import make_production_mesh

@@ -9,17 +9,15 @@ The four assigned input shapes:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.nn.config import ModelConfig
 from repro.nn import transformer as T
-from repro.distributed.sharding import (Constrainer, batch_pspec, make_rules,
-                                        mesh_shape_dict, param_pspecs)
+from repro.distributed.sharding import batch_pspec, make_rules, mesh_shape_dict
 
 SHAPES = {
     "train_4k": dict(kind="train", seq=4096, batch=256),

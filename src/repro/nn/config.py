@@ -70,14 +70,14 @@ class ModelConfig:
     def layer_kinds(self) -> Tuple[str, ...]:
         """Per-layer kind: 'attn' | 'mamba' | 'cross'."""
         kinds = []
-        for l in range(self.num_layers):
+        for li in range(self.num_layers):
             if self.family == "ssm":
                 kinds.append("mamba")
             elif self.family == "hybrid":
-                kinds.append("attn" if (self.attn_every and l % self.attn_every == 0)
+                kinds.append("attn" if (self.attn_every and li % self.attn_every == 0)
                              else "mamba")
             elif self.family == "vlm" and self.cross_attn_every and \
-                    l % self.cross_attn_every == self.cross_attn_every - 1:
+                    li % self.cross_attn_every == self.cross_attn_every - 1:
                 kinds.append("cross")
             else:
                 kinds.append("attn")
@@ -85,8 +85,8 @@ class ModelConfig:
 
     def layer_is_moe(self) -> Tuple[bool, ...]:
         return tuple(
-            self.n_experts > 0 and (l % self.moe_every == self.moe_every - 1)
-            for l in range(self.num_layers))
+            self.n_experts > 0 and (li % self.moe_every == self.moe_every - 1)
+            for li in range(self.num_layers))
 
     def period(self) -> int:
         """Smallest repeating pattern of (kind, is_moe) — the scan body

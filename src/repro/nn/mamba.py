@@ -118,7 +118,6 @@ def mamba_decode(cfg: ModelConfig, p, x, conv_state, ssm_state,
                  sc: Constrainer = no_sc):
     """One-token decode.  x: (B, 1, D); conv_state: (B, d_conv-1, di);
     ssm_state: (B, di, n).  Returns (y, conv_state, ssm_state)."""
-    b = x.shape[0]
     di, n, kc = cfg.d_inner, cfg.ssm_state, cfg.d_conv
     xz = x[:, 0] @ p["w_in"].astype(x.dtype)           # (B, 2di)
     x1, z = jnp.split(xz, 2, axis=-1)

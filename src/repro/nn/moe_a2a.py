@@ -24,8 +24,6 @@ reduced densely at the owner.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -11,7 +11,7 @@ replication), following the 2-D sharding scheme of DESIGN.md S5:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,7 +75,7 @@ def tree_initialize(spec_tree, key: jax.Array):
     leaves, treedef = jax.tree.flatten(
         spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
     keys = jax.random.split(key, len(leaves))
-    vals = [l.initialize(k) for l, k in zip(leaves, keys)]
+    vals = [s.initialize(k) for s, k in zip(leaves, keys)]
     return jax.tree.unflatten(treedef, vals)
 
 
@@ -103,4 +103,4 @@ def stack_specs(spec_tree, n: int):
 def param_count(spec_tree) -> int:
     leaves = jax.tree.leaves(spec_tree,
                              is_leaf=lambda x: isinstance(x, ParamSpec))
-    return int(sum(np.prod(l.shape) for l in leaves))
+    return int(sum(np.prod(s.shape) for s in leaves))

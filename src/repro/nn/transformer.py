@@ -14,12 +14,10 @@ Entry points:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.nn.config import ModelConfig
 from repro.nn import layers as L
@@ -77,7 +75,6 @@ def model_specs(cfg: ModelConfig) -> Dict[str, Any]:
     if not cfg.tie_embeddings:
         sp["lm_head"] = ParamSpec((d, vp), ("embed", "vocab"))
     if cfg.family == "encdec":
-        enc_cfg = cfg  # same dims for encoder stack
         sp["encoder"] = {
             "layers": stack_specs(
                 {"slot0": _block_specs(cfg, "attn", False)}, cfg.enc_layers),

@@ -17,17 +17,24 @@ layer uses sum aggregation; other ops fall back to exact eager execution.
 The model stack must use the "segment" aggregation backend: the engine
 feeds each layer a per-batch edge-list graph dict, and segment is the
 backend that consumes (src, dst, val) directly.
+
+Out-of-core guard (DESIGN.md C7): with `device_budget_bytes` set, a
+batch whose L-hop subgraph would not fit on device (hub seeds can pull
+in a large fraction of the graph) is executed through the streamed
+tiled executor instead of OOMing — same results, bounded device
+footprint, counted in `stats["tiled_batches"]`.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.tiled import TiledExecutor, dense_footprint_bytes
 from repro.graphs.format import COOGraph
 from repro.graphs.subgraph import SubgraphExtractor
 from repro.serving.batcher import GNNBatcher, Request, Response
@@ -44,6 +51,11 @@ class ServingConfig:
     cache_reserved_frac: float = 0.5  # DAVC reserved-line fraction
     coalesce: bool = True
     bucketing: bool = True            # pad subgraphs to pow2 shape buckets
+    # device-memory budget for per-batch subgraph inference; batches
+    # whose subgraph footprint exceeds it run via the streamed tiled
+    # executor (None/0 disables the guard)
+    device_budget_bytes: Optional[int] = None
+    tiled_tile: int = 128             # interval size for tiled fallback
 
 
 def _next_pow2(n: int) -> int:
@@ -64,12 +76,25 @@ class GNNServingEngine:
     def __init__(self, graph: COOGraph, x: np.ndarray, layers, params,
                  config: Optional[ServingConfig] = None):
         config = config if config is not None else ServingConfig()
-        bad = [l.name for l in layers if l.cfg.backend != "segment"]
+        bad = [ly.name for ly in layers if ly.cfg.backend != "segment"]
         if bad:
             raise ValueError(
                 f"serving requires segment-backend layers, got non-segment "
                 f"backend on {bad} (the engine feeds per-batch edge-list "
                 f"graph dicts that only the segment backend consumes)")
+        if config.device_budget_bytes:
+            # the tiled fallback streams through EnGNLayer's generic
+            # stage functions; models that override apply() wholesale
+            # (R-GCN's per-relation reduce, Gated-GCN's two-endpoint
+            # edge gate) cannot spill — fail at construction, not on
+            # the first hub-heavy batch
+            from repro.core.engn import EnGNLayer
+            untiled = [ly.name for ly in layers
+                       if type(ly).apply is not EnGNLayer.apply]
+            if untiled:
+                raise ValueError(
+                    f"device_budget_bytes is set but {untiled} override "
+                    f"apply() and cannot run via the tiled fallback")
         self.graph = graph
         self.x = np.asarray(x)
         self.layers = layers
@@ -89,10 +114,11 @@ class GNNServingEngine:
                                   config.max_wait_s, config.coalesce,
                                   pad=False)
         self._can_bucket = config.bucketing and all(
-            l.cfg.aggregate_op == "sum" for l in layers)
+            ly.cfg.aggregate_op == "sum" for ly in layers)
         self._compiled: Dict = {}
         self.stats = {"subgraphs": 0, "subgraph_vertices": 0,
-                      "subgraph_edges": 0, "compiles": 0}
+                      "subgraph_edges": 0, "compiles": 0,
+                      "tiled_batches": 0}
 
     # -- public API --------------------------------------------------------
     def submit(self, rid: int, vertex_ids: np.ndarray):
@@ -157,6 +183,9 @@ class GNNServingEngine:
         self.stats["subgraph_vertices"] += g.num_vertices
         self.stats["subgraph_edges"] += g.num_edges
         xs = self.x[sub.vertices]
+        budget = self.config.device_budget_bytes
+        if budget and self._subgraph_footprint(g) > budget:
+            return self._run_subgraph_tiled(sub, xs)
         if not self._can_bucket:
             gd = {"n": g.num_vertices, "src": jnp.asarray(g.src),
                   "dst": jnp.asarray(g.dst), "val": jnp.asarray(g.weights())}
@@ -203,3 +232,37 @@ class GNNServingEngine:
         for layer, p in zip(self.layers, self.params):
             y = layer.apply(p, gd, y)
         return y
+
+    # -- out-of-core fallback (DESIGN.md C7) -------------------------------
+    def _subgraph_footprint(self, g: COOGraph) -> int:
+        """Device bytes the dense segment path would need for this
+        subgraph, at the widest layer of the stack — priced at the
+        pow2-bucketed shapes the bucketed path actually allocates, so
+        padding cannot overshoot the budget undetected."""
+        n, e = g.num_vertices, g.num_edges
+        if self._can_bucket:
+            n = max(_next_pow2(n + 1), 256)
+            e = max(_next_pow2(max(e, 1)), 1024)
+        return max(dense_footprint_bytes(
+            n, e, layer.cfg.in_dim, layer.cfg.out_dim, "segment")
+            for layer in self.layers)
+
+    def _run_subgraph_tiled(self, sub, xs: np.ndarray) -> np.ndarray:
+        """Run the stack through the streamed tiled executor: the
+        subgraph's edge tiles stay in host memory and stream through
+        the device under the budget (instead of OOMing on hub seeds).
+        The tile store is rebuilt per batch — O(E log E) host work on
+        sparse edge lists (layer jit caches are shared across batches,
+        so only the store build recurs)."""
+        g = sub.graph
+        dims = [self.layers[0].cfg.in_dim] + \
+            [layer.cfg.out_dim for layer in self.layers]
+        ex = TiledExecutor(g, tile=self.config.tiled_tile,
+                           budget_bytes=self.config.device_budget_bytes,
+                           dim_hint=max(dims))
+        gd = {"n": g.num_vertices, "backend": "tiled", "tiled_exec": ex}
+        y = np.asarray(xs, np.float32)
+        for layer, p in zip(self.layers, self.params):
+            y = layer.apply(p, gd, y)
+        self.stats["tiled_batches"] += 1
+        return np.asarray(y[:sub.num_seeds])

@@ -6,7 +6,7 @@ the parameter tree so it inherits the parameters' 2-D sharding.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

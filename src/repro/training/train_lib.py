@@ -4,8 +4,7 @@ error-feedback gradient compression on the data-parallel reduction.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -87,10 +86,10 @@ def make_grad_accum_train_step(cfg: ModelConfig,
 
         def body(carry, mb):
             gsum, lsum = carry
-            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            lv, g = jax.value_and_grad(loss_fn)(params, mb)
             gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
                                 gsum, g)
-            return (gsum, lsum + l), None
+            return (gsum, lsum + lv), None
 
         zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                              params)

@@ -4,13 +4,10 @@ agreement (segment vs tiled Pallas)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
-from repro.core.engn import EnGNConfig, EnGNLayer, prepare_graph, \
-    segment_aggregate
-from repro.core.models import (GCNLayer, GSPoolLayer, RGCNLayer,
-                               GatedGCNLayer, GRNLayer, make_gnn,
-                               make_gnn_stack, init_stack, apply_stack)
+from repro.core.engn import EnGNConfig, prepare_graph, segment_aggregate
+from repro.core.models import (RGCNLayer, make_gnn, make_gnn_stack,
+                               init_stack, apply_stack)
 from repro.graphs.format import COOGraph
 from repro.graphs.generate import rmat_graph, random_features
 
@@ -64,13 +61,13 @@ def test_gcn_dasr_auto_picks_cheaper():
 
 
 def test_gcn_backends_agree():
-    """segment (edge-centric reference) vs tiled (Pallas RER-SpMM) vs
-    fused (Fig. 8 stage-overlap kernel)."""
+    """segment (edge-centric reference) vs blocked (Pallas RER-SpMM) vs
+    fused (Fig. 8 stage-overlap kernel) vs tiled (out-of-core stream)."""
     g = _graph(80, 600, seed=5, weighted=False).gcn_normalized()
     f, h = 16, 12
     x = random_features(g.num_vertices, f, seed=3)
     seg = make_gnn("gcn", f, h, backend="segment")
-    til = make_gnn("gcn", f, h, backend="tiled", tile=16)
+    til = make_gnn("gcn", f, h, backend="blocked", tile=16)
     fus = make_gnn("gcn", f, h, backend="fused", tile=16)
     params = seg.init(jax.random.key(2))
     y_seg = np.asarray(seg.apply(params, prepare_graph(g, seg.cfg),
@@ -81,6 +78,9 @@ def test_gcn_backends_agree():
                                  jnp.asarray(x)))
     np.testing.assert_allclose(y_seg, y_til, rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(y_seg, y_fus, rtol=1e-4, atol=1e-4)
+    ooc = make_gnn("gcn", f, h, backend="tiled", tile=16)
+    y_ooc = ooc.apply(params, prepare_graph(g, ooc.cfg), x)
+    np.testing.assert_allclose(y_seg, y_ooc, rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------------- GS-Pool

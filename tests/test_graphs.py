@@ -1,7 +1,6 @@
 """Graph-substrate invariants: formats, partitioning, degree relabelling,
 tiling schedule + I/O model.  Property-based via hypothesis."""
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -13,7 +12,7 @@ from repro.core.davc import simulate_davc
 from repro.graphs.degree import (apply_vertex_permutation,
                                  degree_sort_permutation, hub_edge_coverage,
                                  permute_features, unpermute_features)
-from repro.graphs.format import COOGraph, coo_to_blocked, coo_to_csr
+from repro.graphs.format import coo_to_blocked, coo_to_csr
 from repro.graphs.generate import DATASET_STATS, make_dataset, rmat_graph
 from repro.graphs.partition import (grid_partition, io_cost,
                                     schedule_tiles, simulated_io_bytes,
@@ -63,9 +62,7 @@ def test_blocked_orders_same_content(g):
 def test_gcn_normalized_symmetric_laplacian():
     """Edge weights must equal d_dst^-1/2 * d_src^-1/2 over A+I."""
     g = rmat_graph(30, 120, seed=1).gcn_normalized()
-    a = g.dense_adjacency()
-    # row sums of D^-1/2 A D^-1/2 for a symmetric-ish graph stay <= ~1;
-    # exact invariant: a[i,j] = (d_i d_j)^-1/2 for every edge
+    # exact invariant: weight(i,j) = (d_i d_j)^-1/2 for every edge
     deg = np.bincount(g.dst, minlength=g.num_vertices)  # in-deg of A~
     for s, d, v in zip(g.src[:200], g.dst[:200], g.val[:200]):
         np.testing.assert_allclose(v, 1 / np.sqrt(deg[s] * deg[d]),

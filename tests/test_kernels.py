@@ -4,7 +4,6 @@ Shape/dtype sweeps per the deliverable: every kernel is checked against
 its ref.py oracle across tile counts, feature dims, op variants.
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

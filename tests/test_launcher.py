@@ -1,6 +1,5 @@
 """The production launcher assembles and runs for every family."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

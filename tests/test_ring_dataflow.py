@@ -13,9 +13,8 @@ import textwrap
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
-from repro.core.dataflow import ring_aggregate_dense, shard_adjacency_for_ring
+from repro.core.dataflow import shard_adjacency_for_ring
 
 
 def test_shard_adjacency_blocks_reassemble():
@@ -80,7 +79,6 @@ def test_ring_aggregate_multidevice_subprocess():
 
 def test_ring_aggregate_single_device_inside_shard_map():
     """p=1 degenerate ring: must equal a plain matmul."""
-    from jax.sharding import Mesh, PartitionSpec as P
     from repro.core.dataflow import make_ring_aggregate
     rng = np.random.default_rng(1)
     a = rng.standard_normal((8, 8)).astype(np.float32)
@@ -133,13 +131,13 @@ def test_prepare_graph_ring_backend_single_device():
 
 
 def test_prepare_graph_supports_all_declared_backends():
-    """EnGNConfig declares four backends; prepare_graph must accept all
+    """EnGNConfig declares five backends; prepare_graph must accept all
     of them (no ValueError fallthrough for 'ring' any more)."""
     from repro.core.engn import EnGNConfig, prepare_graph
     from repro.graphs.generate import rmat_graph
 
     g = rmat_graph(40, 200, seed=3).gcn_normalized()
-    for backend in ("segment", "tiled", "fused", "ring"):
+    for backend in ("segment", "blocked", "tiled", "fused", "ring"):
         cfg = EnGNConfig(in_dim=8, out_dim=4, backend=backend, tile=16)
         gd = prepare_graph(g, cfg)
         assert gd["n"] == g.num_vertices

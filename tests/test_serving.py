@@ -299,7 +299,7 @@ def test_engine_rejects_non_segment_backend():
     from repro.serving.engine import GNNServingEngine
 
     g = rmat_graph(40, 200, seed=0).gcn_normalized()
-    layers = make_gnn_stack("gcn", [8, 4], backend="tiled", tile=16)
+    layers = make_gnn_stack("gcn", [8, 4], backend="blocked", tile=16)
     params = init_stack(layers, jax.random.key(0))
     with pytest.raises(ValueError, match="segment-backend"):
         GNNServingEngine(g, random_features(40, 8, 1), layers, params)

@@ -10,11 +10,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, get_smoke
 from repro.distributed.sharding import (Constrainer, batch_pspec,
-                                        make_rules, mesh_shape_dict,
-                                        param_pspecs)
+                                        make_rules, param_pspecs)
 from repro.launch import specs as SP
-from repro.launch.mesh import make_elastic_mesh, single_device_mesh
-from repro.nn.param import DEFAULT_RULES, ParamSpec, spec_to_pspec
+from repro.launch.mesh import single_device_mesh
+from repro.nn.param import ParamSpec, spec_to_pspec
 
 
 def test_spec_to_pspec_divisibility_fallback():

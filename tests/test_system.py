@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.engn import EnGNConfig, prepare_graph
+from repro.core.engn import prepare_graph
 from repro.core.models import make_gnn_stack, init_stack, apply_stack
 from repro.graphs.degree import (apply_vertex_permutation,
                                  degree_sort_permutation, permute_features,
@@ -20,7 +20,7 @@ from repro.launch.jaxpr_cost import traced_cost
 
 def test_full_engn_pipeline_cora_scale():
     """Cora-shaped graph through the production path: degree relabelling
-    (TPU-DAVC) -> GCN normalisation -> tiled RER-SpMM backend -> 2-layer
+    (TPU-DAVC) -> GCN normalisation -> blocked RER-SpMM backend -> 2-layer
     GCN -> unpermute.  Must equal the naive segment path exactly."""
     g, f, labels = make_dataset("cora", seed=0)
     f = 64                      # keep the CPU run fast
@@ -30,7 +30,7 @@ def test_full_engn_pipeline_cora_scale():
     perm = degree_sort_permutation(g)
     g_opt = apply_vertex_permutation(g, perm).gcn_normalized()
     x_opt = permute_features(x, perm)
-    layers = make_gnn_stack("gcn", [f, 32, labels], backend="tiled",
+    layers = make_gnn_stack("gcn", [f, 32, labels], backend="blocked",
                             tile=128)
     params = init_stack(layers, jax.random.key(0))
     gd = prepare_graph(g_opt, layers[0].cfg)

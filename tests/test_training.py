@@ -3,7 +3,6 @@ gradient compression (error feedback), GNN end-to-end loss descent."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -207,7 +206,7 @@ def test_gnn_node_classification_learns():
 
     opt = init_opt_state(params)
     cfg = AdamWConfig(weight_decay=0.0)
-    step = jax.jit(lambda ps, o: (lambda l, g: adamw_update(cfg, g, o, ps, 0.01) + (l,))(*jax.value_and_grad(loss_fn)(ps)))
+    step = jax.jit(lambda ps, o: (lambda lv, g: adamw_update(cfg, g, o, ps, 0.01) + (lv,))(*jax.value_and_grad(loss_fn)(ps)))
     l0 = float(loss_fn(params))
     for _ in range(150):
         params, opt, _ = step(params, opt)
