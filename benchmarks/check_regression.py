@@ -1,0 +1,114 @@
+"""Bench-smoke regression gate.
+
+Compares the key throughput rows of a `benchmarks.run --smoke` CSV
+against the committed baseline (`experiments/bench_smoke_baseline.json`)
+and exits non-zero when any gated row regresses by more than the
+tolerance (default 30%) — the CI bench-smoke job runs this after the
+smoke sweep, so a PR that tanks a hot path fails instead of silently
+recording a slower CSV artifact.
+
+    PYTHONPATH=src python -m benchmarks.check_regression
+    PYTHONPATH=src python -m benchmarks.check_regression --update
+
+Only rows named in the baseline are gated (wall-clock numbers jitter
+per machine class; the curated set is the stable smoke throughputs).
+`--update` rewrites the baseline's values from the current CSV —
+regenerate it whenever the runner machine class or the smoke workload
+changes, and commit the result.  `--tolerance` (or the
+BENCH_REGRESSION_TOL env var) overrides the default for noisy runners.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+DEFAULT_CSV = "experiments/bench_smoke.csv"
+DEFAULT_BASELINE = "experiments/bench_smoke_baseline.json"
+
+
+def load_csv(path: str) -> dict:
+    rows = {}
+    with open(path) as f:
+        header = f.readline()
+        assert header.startswith("name,"), f"not a bench CSV: {path}"
+        for line in f:
+            parts = line.rstrip("\n").split(",", 2)
+            if len(parts) >= 2:
+                try:
+                    rows[parts[0]] = float(parts[1])
+                except ValueError:
+                    pass
+    return rows
+
+
+def check(baseline: dict, current: dict, tolerance: float) -> int:
+    failures = []
+    for name, spec in sorted(baseline["rows"].items()):
+        base = float(spec["value"])
+        direction = spec.get("direction", "higher")
+        tol = float(spec.get("tolerance", tolerance))
+        cur = current.get(name)
+        if cur is None:
+            failures.append(f"{name}: missing from current CSV "
+                            f"(baseline {base:g})")
+            continue
+        if direction == "higher":
+            bound = base * (1.0 - tol)
+            bad = cur < bound
+            verdict = f"{cur:g} vs >= {bound:g} (base {base:g})"
+        else:
+            bound = base * (1.0 + tol)
+            bad = cur > bound
+            verdict = f"{cur:g} vs <= {bound:g} (base {base:g})"
+        status = "FAIL" if bad else "ok"
+        print(f"[{status}] {name}: {verdict}")
+        if bad:
+            failures.append(f"{name}: {verdict}")
+    if failures:
+        print(f"\n{len(failures)} bench regression(s) beyond "
+              f"{tolerance:.0%}:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print(f"\nall {len(baseline['rows'])} gated rows within "
+          f"{tolerance:.0%} of baseline")
+    return 0
+
+
+def update(baseline_path: str, baseline: dict, current: dict) -> int:
+    missing = [n for n in baseline["rows"] if n not in current]
+    if missing:
+        print(f"cannot update: rows missing from CSV: {missing}",
+              file=sys.stderr)
+        return 1
+    for name, spec in baseline["rows"].items():
+        spec["value"] = current[name]
+    Path(baseline_path).write_text(json.dumps(baseline, indent=2,
+                                              sort_keys=True) + "\n")
+    print(f"updated {len(baseline['rows'])} baseline rows "
+          f"-> {baseline_path}")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", default=DEFAULT_CSV)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_REGRESSION_TOL",
+                                                 0.30)))
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline values from the CSV")
+    args = ap.parse_args()
+    baseline = json.loads(Path(args.baseline).read_text())
+    current = load_csv(args.csv)
+    if args.update:
+        return update(args.baseline, baseline, current)
+    return check(baseline, current, args.tolerance)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

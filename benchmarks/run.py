@@ -19,7 +19,8 @@ from pathlib import Path
 from benchmarks import (bench_stage_breakdown, bench_edge_reorg,
                         bench_dim_sensitivity, bench_dasr, bench_tiling,
                         bench_tiled_exec, bench_davc, bench_scaling,
-                        bench_throughput, bench_ablation, bench_serving)
+                        bench_throughput, bench_ablation, bench_serving,
+                        bench_ring_tiled)
 from benchmarks import common
 from benchmarks.common import rows
 
@@ -31,6 +32,7 @@ BENCHES = {
     "fig14": bench_dasr,                # DASR speedup
     "fig15": bench_tiling,              # tiling schedule I/O (model)
     "tiled": bench_tiled_exec,          # out-of-core tiled executor
+    "ring_tiled": bench_ring_tiled,     # sharded ring-tiled mesh scaling
     "fig16": bench_davc,                # DAVC hit rates
     "fig17": bench_scaling,             # PE/ring scaling
     "ablation": bench_ablation,         # technique-by-technique
@@ -58,7 +60,10 @@ def main() -> int:
         BENCHES[k].run()
         print(f"# {k} done in {time.time() - t0:.1f}s", flush=True)
 
-    out = Path("experiments/bench_results.csv")
+    # smoke rows go to their own file: bench_results.csv is the tracked
+    # full-run trajectory and must not be clobbered by partial CI rows
+    out = Path("experiments/bench_smoke.csv" if args.smoke
+               else "experiments/bench_results.csv")
     out.parent.mkdir(exist_ok=True)
     out.write_text("name,value,derived\n" + "\n".join(rows()) + "\n")
     print(f"# wrote {out}")

@@ -1,6 +1,8 @@
 """Pod-scale Ring-Edge-Reduce: the paper's RER dataflow one level up the
 hierarchy — vertex-feature shards rotate around a ring of devices via
-collective-permute while each device reduces its adjacency blocks.
+collective-permute while each device reduces the sparse edge tiles it
+owns (DESIGN.md C2).  No dense adjacency, no full-graph replication:
+each device holds one destination shard's tile stripe and accumulator.
 
     PYTHONPATH=src python examples/multipod_ring.py
 
@@ -15,8 +17,8 @@ import numpy as np                                    # noqa: E402
 import jax                                            # noqa: E402
 import jax.numpy as jnp                               # noqa: E402
 
-from repro.core.dataflow import (make_ring_aggregate,       # noqa: E402
-                                 shard_adjacency_for_ring)
+from repro.core.engn import prepare_graph, segment_aggregate  # noqa: E402
+from repro.core.models import make_gnn                # noqa: E402
 from repro.graphs.generate import rmat_graph, random_features  # noqa: E402
 
 
@@ -24,32 +26,38 @@ def main():
     p = len(jax.devices())
     print(f"devices: {p}")
     g = rmat_graph(2048, 40000, seed=0).gcn_normalized()
-    a = g.dense_adjacency()
     x = random_features(g.num_vertices, 64, seed=1)
 
-    mesh = jax.make_mesh((p,), ("ring",))
-    blocks = shard_adjacency_for_ring(a, p)
-    print(f"ring blocks: {blocks.shape} "
-          f"({blocks.nbytes/1e6:.1f} MB adjacency, sharded {p} ways)")
+    layer = make_gnn("gcn", 64, 32, backend="ring")
+    params = layer.init(jax.random.key(0))
+    gd = prepare_graph(g, layer.cfg)
+    meta = gd["ring_meta"]
+    stats = meta["stats"].as_dict()
+    dense_mb = 4 * g.num_vertices ** 2 / 1e6
+    print(f"ring: {meta['shards']} shards, tile {meta['tile']}, "
+          f"{meta['nnzb']} edge tiles "
+          f"({meta['device_bytes'] / 1e6:.1f} MB/shard vs "
+          f"{dense_mb:.0f} MB dense A)")
+    print(f"per aggregate: {stats['ring_steps']} ppermute hops, "
+          f"{stats['ppermute_bytes'] / 1e6:.1f} MB rotated")
 
-    fn = jax.jit(make_ring_aggregate(mesh, "ring", op="sum"))
-    nl = blocks.shape[2]
-    xp = np.zeros((p * nl, x.shape[1]), np.float32)
-    xp[: x.shape[0]] = x
-    y = np.asarray(jax.block_until_ready(fn(jnp.asarray(blocks),
-                                            jnp.asarray(xp))))
+    fn = jax.jit(lambda xx: layer.apply(params, gd, xx))
+    y = np.asarray(jax.block_until_ready(fn(jnp.asarray(x))))
 
-    want = a @ x
-    np.testing.assert_allclose(y[: g.num_vertices], want, rtol=1e-4,
-                               atol=1e-4)
+    # oracle: the segment reference on one device
+    ev = (jnp.asarray(x)[jnp.asarray(g.src)] @ params["w"]
+          * jnp.asarray(g.val)[:, None])
+    want = jax.nn.relu(segment_aggregate(ev, jnp.asarray(g.dst),
+                                         g.num_vertices, "sum"))
+    np.testing.assert_allclose(y, np.asarray(want), rtol=1e-4, atol=1e-4)
 
     # prove the ring hop is a collective-permute (not an all-gather)
-    txt = jax.jit(fn).lower(jnp.asarray(blocks),
-                            jnp.asarray(xp)).compile().as_text()
+    txt = fn.lower(jnp.asarray(x)).compile().as_text()
     n_cp = txt.count("collective-permute(")
     print(f"HLO: {n_cp} collective-permute op(s) — the RER ring hop")
     assert "collective-permute" in txt
-    print("OK: ring aggregate == A @ X on", p, "devices")
+    print("OK: sharded ring-tiled GCN layer == segment reference on",
+          p, "devices")
 
 
 if __name__ == "__main__":

@@ -4,26 +4,64 @@ The ASIC connects PEs in a column into a ring; vertex properties flow
 around the ring and every PE reduces the edges it owns.  The TPU analogue
 lives one level up: *devices* form the ring (ICI torus), vertex-feature
 shards rotate with `lax.ppermute`, and each device reduces the adjacency
-blocks it owns against whichever shard is currently resident.  Each hop's
-permute is issued before the block contraction so XLA's latency-hiding
+tiles it owns against whichever shard is currently resident.  Each hop's
+permute is issued before the tile contraction so XLA's latency-hiding
 scheduler overlaps communication with the MXU work — the same
 keep-the-ring-busy property the paper gets from edge reorganisation.
+
+Two implementations share the dataflow:
+
+* `ring_aggregate_dense` / `make_ring_aggregate` — the original dense
+  reference: each device holds its (P, n_loc, n_loc) stripe of the full
+  adjacency.  O(N^2 / P) device bytes per shard; oracle for tests and
+  for `bench_scaling`.
+* the **sharded ring-tiled backend** (`build_ring_tile_shards` /
+  `make_ring_tiled_aggregate`) — the production path behind
+  `EnGNConfig(backend="ring")`.  Destination vertices are partitioned
+  into P shards; each device keeps only the *non-empty* T x T edge
+  tiles of its stripe (the same sparse per-tile edge lists as
+  `graphs.partition.EdgeTileStore`, densified once at build), its
+  accumulator stays resident, and source-feature shards rotate around
+  the ring.  No dense A, no full-graph replication: per-shard device
+  bytes are O(nnzb_stripe * T^2 + n_loc * (F + H)).
+
+Zero-weight caveat (shared with every dense-tile backend): tiles are
+dense scatter-adds, so an explicit 0.0-weight edge is indistinguishable
+from no edge — max aggregation masks it out, where the segment
+reference would include its 0*x term.  Drop or epsilon explicit zero
+weights if that distinction matters.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
-from typing import Callable
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
+
+from repro.graphs.format import COOGraph
+from repro.graphs.partition import build_tile_store
 
 
 def _ring_step_perm(p: int):
     # receive from the southern neighbour: (i+1) % p sends to i
     return [((i + 1) % p, i) for i in range(p)]
 
+
+def _pvary(x, axis_name: str):
+    """Mark a carry as device-varying (shard_map vma semantics; jax <
+    0.6 has no varying-manual-axes tracking, so this is an identity)."""
+    pvary = getattr(jax.lax, "pvary", None)
+    return pvary(x, (axis_name,)) if pvary is not None else x
+
+
+# ----------------------------------------------------------------------
+# Dense reference ring (oracle; bench_scaling / small graphs only)
+# ----------------------------------------------------------------------
 
 def ring_aggregate_dense(a_blocks: jnp.ndarray, x_shard: jnp.ndarray,
                          axis_name: str, op: str = "sum") -> jnp.ndarray:
@@ -40,11 +78,8 @@ def ring_aggregate_dense(a_blocks: jnp.ndarray, x_shard: jnp.ndarray,
     init_acc = jnp.zeros(x_shard.shape, jnp.float32) if op == "sum" else \
         jnp.full(x_shard.shape, -jnp.inf, jnp.float32)
     # mark the carry as device-varying so the fori_loop carry types match
-    # after the ppermute (shard_map vma semantics; jax < 0.6 has no
-    # varying-manual-axes tracking, so pvary is an identity there)
-    pvary = getattr(jax.lax, "pvary", None)
-    if pvary is not None:
-        init_acc = pvary(init_acc, (axis_name,))
+    # after the ppermute
+    init_acc = _pvary(init_acc, axis_name)
 
     def body(k, carry):
         x_rot, acc = carry
@@ -70,28 +105,64 @@ def ring_aggregate_dense(a_blocks: jnp.ndarray, x_shard: jnp.ndarray,
     return acc
 
 
+def pad_ring_features(x, num_shards: int):
+    """Pad vertex-feature rows up to a multiple of `num_shards` (the
+    companion of `shard_adjacency_for_ring`, which pads A the same way:
+    padded rows are zero and contribute nothing)."""
+    n = x.shape[0]
+    pad = (-n) % num_shards
+    if pad == 0:
+        return np.asarray(x)
+    return np.concatenate(
+        [np.asarray(x), np.zeros((pad,) + x.shape[1:], x.dtype)])
+
+
 def make_ring_aggregate(mesh: Mesh, axis: str, op: str = "sum") -> Callable:
     """shard_map wrapper: (A_blocks_global, X_global) -> AX.
 
     A_blocks_global: (P, P, n_loc, n_loc) with A_blocks_global[d, s] the
     block of A mapping shard s sources to shard d destinations.
-    X_global: (N, F) row-sharded over `axis`.
+    X_global: (N, F) row-sharded over `axis` — N must be a multiple of
+    the ring size (pad with `pad_ring_features`; a non-multiple would
+    otherwise fail deep inside shard_map with an opaque sharding error).
     """
     fn = partial(ring_aggregate_dense, axis_name=axis, op=op)
+    p = int(mesh.devices.size)
 
     def inner(a_blocks, x):
         # a_blocks arrives as (1, P, n_loc, n_loc) per device; squeeze.
         return fn(a_blocks[0], x)
 
-    return shard_map(inner, mesh=mesh,
-                     in_specs=(P(axis, None, None, None), P(axis, None)),
-                     out_specs=P(axis, None))
+    sm = shard_map(inner, mesh=mesh,
+                   in_specs=(P(axis, None, None, None), P(axis, None)),
+                   out_specs=P(axis, None))
+
+    def call(a_blocks, x):
+        if a_blocks.shape[0] != p or a_blocks.shape[1] != p:
+            raise ValueError(
+                f"a_blocks must be (P, P, n_loc, n_loc) with P={p} ring "
+                f"shards, got {a_blocks.shape} (build it with "
+                f"shard_adjacency_for_ring(a, {p}))")
+        if x.shape[0] != p * a_blocks.shape[2]:
+            raise ValueError(
+                f"X has {x.shape[0]} rows but the ring blocks expect "
+                f"{p} shards of {a_blocks.shape[2]} vertices — pad the "
+                f"features to {p * a_blocks.shape[2]} rows with "
+                f"pad_ring_features (shard_adjacency_for_ring already "
+                f"pads A the same way)")
+        return sm(a_blocks, x)
+
+    return call
 
 
 def shard_adjacency_for_ring(a_dense, num_shards: int):
     """Host-side: dense A (N, N) -> (P, P, n_loc, n_loc) ring blocks,
     padding N up to a multiple of P."""
-    import numpy as np
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    a_dense = np.asarray(a_dense)
+    if a_dense.ndim != 2 or a_dense.shape[0] != a_dense.shape[1]:
+        raise ValueError(f"adjacency must be square, got {a_dense.shape}")
     n = a_dense.shape[0]
     n_loc = -(-n // num_shards)
     pad = num_shards * n_loc - n
@@ -99,3 +170,248 @@ def shard_adjacency_for_ring(a_dense, num_shards: int):
         a_dense = np.pad(a_dense, ((0, pad), (0, pad)))
     a = a_dense.reshape(num_shards, n_loc, num_shards, n_loc)
     return np.ascontiguousarray(a.transpose(0, 2, 1, 3))
+
+
+# ----------------------------------------------------------------------
+# Sharded ring-tiled backend (the "ring" backend of EnGNConfig)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RingStats:
+    """Analytic traffic counters for one ring-tiled aggregate call,
+    mirroring `core.tiled.TiledStats` (the device mesh has no host
+    streaming, so the counters are computed from the plan, not
+    measured)."""
+    shards: int = 0
+    ring_steps: int = 0        # ppermute hops per aggregate (= P)
+    tiles: int = 0             # non-empty tiles reduced across the mesh
+    padded_tiles: int = 0      # tiles staged after S_max padding
+    block_bytes: int = 0       # device-resident tile bytes per shard
+    ppermute_bytes: int = 0    # feature bytes rotated per aggregate
+    x_shard_bytes: int = 0     # one resident feature shard
+    acc_bytes: int = 0         # the resident destination accumulator
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class RingTileShards:
+    """Host-built, device-sharded form of the Q x Q edge-tile grid for
+    the ring dataflow: destination vertices are split into P contiguous
+    shards of `n_loc` (= q_loc * tile) vertices; each shard owns the
+    row-stripe of tiles whose destination interval it contains, grouped
+    by the source shard the ring rotation will deliver.
+
+    blocks[d, s, i] is the i-th non-empty dense tile mapping sources of
+    shard s to destinations of shard d; (tile_row, tile_col)[d, s, i]
+    are its *local* destination/source interval indices.  Pairs are
+    padded to `s_max` tiles with all-zero tiles (they contribute nothing
+    to sum and are masked out of max).
+    """
+    num_shards: int
+    tile: int
+    q_loc: int                  # tile intervals per shard
+    n_loc: int                  # padded vertices per shard (q_loc * tile)
+    s_max: int                  # padded tiles per (dst, src) shard pair
+    nnzb: int                   # non-empty tiles (unpadded)
+    num_vertices: int
+    blocks: np.ndarray          # (P, P, s_max, T, T) float32
+    tile_row: np.ndarray        # (P, P, s_max) int32, local dst interval
+    tile_col: np.ndarray        # (P, P, s_max) int32, local src interval
+    in_counts: np.ndarray       # (P, n_loc) float32 in-edge counts
+
+    @property
+    def padded_vertices(self) -> int:
+        return self.num_shards * self.n_loc
+
+    def device_bytes(self) -> int:
+        """Device-resident bytes per shard: the tile stripe + indices +
+        the in-count shard (feature/accumulator bytes are priced by
+        `ring_feature_bytes` — they depend on the layer dims)."""
+        p = self.num_shards
+        per_dev_tiles = p * self.s_max
+        return int(4 * per_dev_tiles * self.tile * self.tile
+                   + 2 * 4 * per_dev_tiles
+                   + 4 * self.n_loc)
+
+    def stats(self, feat_dim: int, out_dim: Optional[int] = None) -> RingStats:
+        p = self.num_shards
+        h = out_dim if out_dim is not None else feat_dim
+        return RingStats(
+            shards=p,
+            ring_steps=p,
+            tiles=self.nnzb,
+            padded_tiles=p * p * self.s_max,
+            block_bytes=4 * p * self.s_max * self.tile * self.tile,
+            ppermute_bytes=4 * p * p * self.n_loc * feat_dim,
+            x_shard_bytes=4 * self.n_loc * feat_dim,
+            acc_bytes=4 * self.n_loc * h,
+        )
+
+
+def ring_feature_bytes(n_loc: int, in_dim: int, out_dim: int) -> int:
+    """Per-shard bytes of the rotating feature buffers: the resident
+    shard, the in-flight ppermute double buffer, and the accumulator."""
+    return int(4 * n_loc * (2 * in_dim + out_dim))
+
+
+def _ring_geometry(num_vertices: int, num_shards: int, tile: int):
+    """(t, q_loc, n_loc): shard-aligned tile geometry shared by the
+    builder and the cheap sizing pass."""
+    n_loc_raw = -(-num_vertices // num_shards)
+    t = max(1, min(tile, n_loc_raw))
+    q_loc = -(-n_loc_raw // t)
+    return t, q_loc, q_loc * t
+
+
+def ring_stripe_bytes(g: COOGraph, num_shards: int, tile: int = 256,
+                      in_dim: int = 0, out_dim: int = 0) -> int:
+    """Exact per-shard device bytes of the ring-tiled plan for `g` —
+    one O(E) binning pass, no tile densification.  Matches
+    `RingTileShards.device_bytes()` (+ `ring_feature_bytes` when dims
+    are given), so gates can price a batch before paying the build."""
+    p = num_shards
+    t, q_loc, n_loc = _ring_geometry(g.num_vertices, p, tile)
+    q = p * q_loc
+    key = (g.dst // t).astype(np.int64) * q + (g.src // t)
+    uniq = np.unique(key)
+    pair = (uniq // q) // q_loc * p + (uniq % q) // q_loc
+    counts = np.bincount(pair, minlength=p * p)
+    s_max = int(max(counts.max() if counts.size else 0, 1))
+    per_dev = p * s_max
+    return int(4 * per_dev * t * t + 8 * per_dev + 4 * n_loc
+               + ring_feature_bytes(n_loc, in_dim, out_dim))
+
+
+def build_ring_tile_shards(g: COOGraph, num_shards: int,
+                           tile: int = 256) -> RingTileShards:
+    """Partition a COO graph into the per-shard sparse tile stripes the
+    ring-tiled backend keeps device-resident.
+
+    One `EdgeTileStore` build over the shard-aligned padded vertex space
+    (O(E log E) host work), then the non-empty tiles are densified once
+    and grouped by (dst shard, src shard).  Vertex counts that do not
+    divide `num_shards` are padded up — padded rows have no edges and
+    zero features, so they contribute nothing.
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    p = num_shards
+    n = g.num_vertices
+    t, q_loc, n_loc = _ring_geometry(n, p, tile)
+    n_pad = p * n_loc
+    store = build_tile_store(
+        dataclasses.replace(g, num_vertices=n_pad), t)
+    assert store.q == p * q_loc
+
+    d_of = store.block_row // q_loc            # dst shard per tile
+    s_of = store.block_col // q_loc            # src shard per tile
+    pair = d_of.astype(np.int64) * p + s_of
+    order = np.argsort(pair, kind="stable").astype(np.int64)
+    pair_sorted = pair[order]
+    counts = np.bincount(pair_sorted, minlength=p * p)
+    s_max = int(max(counts.max() if counts.size else 0, 1))
+    starts = np.searchsorted(pair_sorted, np.arange(p * p))
+    slot = np.arange(order.size) - starts[pair_sorted]
+
+    blocks = np.zeros((p, p, s_max, t, t), np.float32)
+    tile_row = np.zeros((p, p, s_max), np.int32)
+    tile_col = np.zeros((p, p, s_max), np.int32)
+    if order.size:
+        buf = np.zeros((order.size, t, t), np.float32)
+        store.densify(order, buf)
+        di, si = d_of[order], s_of[order]
+        blocks[di, si, slot] = buf
+        tile_row[di, si, slot] = (store.block_row[order] % q_loc)
+        tile_col[di, si, slot] = (store.block_col[order] % q_loc)
+
+    return RingTileShards(
+        num_shards=p, tile=t, q_loc=q_loc, n_loc=n_loc, s_max=s_max,
+        nnzb=int(store.nnzb), num_vertices=n,
+        blocks=blocks, tile_row=tile_row, tile_col=tile_col,
+        in_counts=store.in_counts.reshape(p, n_loc).astype(np.float32))
+
+
+def _ring_tiled_shard(blocks, tile_row, tile_col, x_shard, counts, *,
+                      axis_name: str, op: str, q_loc: int, tile: int,
+                      num_shards: int):
+    """Per-device body (inside shard_map): reduce this device's sparse
+    tile stripe against each rotating source shard.
+
+    blocks:   (P, s_max, T, T) — this shard's tiles, by source shard.
+    x_shard:  (n_loc, F) — the resident feature shard (rotates).
+    counts:   (n_loc,) — in-edge counts (mean divides by them).
+
+    `num_shards` is static (the mesh size): the ring schedule is a
+    length-P scan, which keeps the loop reverse-differentiable for
+    training (fori_loop with a traced bound would not be).
+    """
+    p = num_shards
+    me = jax.lax.axis_index(axis_name)
+    f = x_shard.shape[1]
+    base_op = "sum" if op == "mean" else op
+    if base_op == "sum":
+        init_acc = jnp.zeros((q_loc, tile, f), jnp.float32)
+    else:
+        init_acc = jnp.full((q_loc, tile, f), -jnp.inf, jnp.float32)
+    init_acc = _pvary(init_acc, axis_name)
+
+    def step(carry, k):
+        x_rot, acc = carry
+        s = jax.lax.rem(me + k, p)
+        blk = jax.lax.dynamic_index_in_dim(blocks, s, 0, keepdims=False)
+        trow = jax.lax.dynamic_index_in_dim(tile_row, s, 0, keepdims=False)
+        tcol = jax.lax.dynamic_index_in_dim(tile_col, s, 0, keepdims=False)
+        # issue the hop before the contraction: the collective-permute
+        # overlaps the tile reduction below (C2)
+        x_next = jax.lax.ppermute(x_rot, axis_name, _ring_step_perm(p))
+        xs = jnp.take(x_rot.reshape(q_loc, tile, f), tcol, axis=0)
+        if base_op == "sum":
+            part = jnp.einsum("ktu,kuf->ktf", blk, xs,
+                              preferred_element_type=jnp.float32)
+            acc = acc + jax.ops.segment_sum(part, trow, num_segments=q_loc)
+        else:
+            # padded (all-zero) tiles contribute -inf rows: a no-op max
+            vals = jnp.where(blk[..., None] != 0.0,
+                             blk[..., None] * xs[:, None, :, :], -jnp.inf)
+            part = jnp.max(vals, axis=2)                   # (s_max, T, F)
+            acc = jnp.maximum(
+                acc, jax.ops.segment_max(part, trow, num_segments=q_loc))
+        return (x_next, acc), None
+
+    (_, acc), _ = jax.lax.scan(step, (x_shard, init_acc),
+                               jnp.arange(p, dtype=jnp.int32))
+    y = acc.reshape(q_loc * tile, f)
+    if base_op == "max":
+        y = jnp.where(jnp.isneginf(y), 0.0, y)
+    if op == "mean":
+        y = y / jnp.maximum(counts, 1.0)[:, None]
+    return y
+
+
+def make_ring_tiled_aggregate(mesh: Mesh, axis: str, op: str,
+                              q_loc: int, tile: int) -> Callable:
+    """shard_map wrapper over `_ring_tiled_shard`:
+
+        (blocks, tile_row, tile_col, X_padded, in_counts) -> A(X)
+
+    with blocks (P, P, s_max, T, T), X_padded (P * n_loc, F) row-sharded
+    over `axis`, in_counts (P, n_loc).  `op` is "sum" | "max" | "mean"
+    (mean = ring sum, then divide by the resident in-count shard).
+    """
+    if op not in ("sum", "max", "mean"):
+        raise ValueError(op)
+    p = int(mesh.shape[axis])
+    body = partial(_ring_tiled_shard, axis_name=axis, op=op,
+                   q_loc=q_loc, tile=tile, num_shards=p)
+
+    def inner(blocks, tile_row, tile_col, x, counts):
+        # leading P dim arrives size-1 per device; squeeze it
+        return body(blocks[0], tile_row[0], tile_col[0], x, counts[0])
+
+    return shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(axis, None, None, None, None), P(axis, None, None),
+                  P(axis, None, None), P(axis, None), P(axis, None)),
+        out_specs=P(axis, None))

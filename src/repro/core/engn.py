@@ -8,9 +8,10 @@ Every GNN is expressed as three stage functions over an edge-centric graph:
 
 `EnGNLayer` is the composable module: it owns the stage functions, the
 DASR decision (S5.2) and the aggregation backend (segment reference,
-device-resident blocked Pallas kernel, fused extract+aggregate, pod-scale
-RER ring, or the out-of-core streamed tiled executor).  Models in
-core/models.py are instances of this class per Table 1.
+device-resident blocked Pallas kernel, fused extract+aggregate, the
+sharded ring-tiled device mesh, or the out-of-core streamed tiled
+executor).  Models in core/models.py are instances of this class per
+Table 1.
 
 Device-memory budget: when `EnGNConfig.device_budget_bytes` is set,
 `prepare_graph` estimates the device footprint of the requested backend
@@ -67,14 +68,17 @@ class EnGNConfig:
     # "segment"  edge-centric reference (Algorithm 1)
     # "blocked"  device-resident blocked RER-SpMM (Pallas on TPU)
     # "fused"    blocked + extraction fused into the aggregate sweep
-    # "ring"     pod-scale RER over a device ring
+    # "ring"     sharded ring-tiled RER over a device mesh: per-shard
+    #            sparse tile stripes + ppermute feature rotation (C2)
     # "tiled"    out-of-core streamed executor (core/tiled.py, C7)
     backend: str = "segment"
-    tile: int = 256                   # T for the blocked/tiled backends
+    tile: int = 256                   # T for the blocked/tiled/ring backends
     ring_shards: Optional[int] = None  # ring: devices in the ring (default all)
     ring_axis: str = "ring"            # ring: mesh axis name
     # device-memory budget for the dense paths; prepare_graph spills to
-    # the streamed tiled backend (auto_spill) or raises when exceeded
+    # the streamed tiled backend (auto_spill) or raises when exceeded.
+    # For the ring backend the budget is PER SHARD: each ring device
+    # must hold its tile stripe + feature shard, not the whole graph.
     device_budget_bytes: Optional[int] = None
     auto_spill: bool = True
     tiled_chunk: int = 8              # tiles per streamed device step
@@ -225,8 +229,13 @@ class EnGNLayer:
         if backend == "ring":
             n = graph["n"]
             pad_n = graph["ring_meta"]["padded"]
-            xf = jnp.zeros((pad_n, feat.shape[1]), feat.dtype).at[:n].set(feat)
-            return graph["ring_fn"](graph["dense_shards"], xf)[:n]
+            xf = jnp.zeros((pad_n, feat.shape[1]),
+                           jnp.float32).at[:n].set(feat)
+            y = graph["ring_fn"](graph["ring_blocks"],
+                                 graph["ring_tile_row"],
+                                 graph["ring_tile_col"], xf,
+                                 graph["ring_counts"])
+            return y[:n]
         raise ValueError(backend)
 
 
@@ -247,13 +256,65 @@ def prepare_tiled(g: COOGraph, cfg: EnGNConfig,
                            "host_bytes": ex.store.nbytes()}}
 
 
+def prepare_ring(g: COOGraph, cfg: EnGNConfig,
+                 out_dim: Optional[int] = None, plan=None, mesh=None):
+    """Build the graph dict for the sharded ring-tiled backend (C2):
+    destination vertices (and their stripe of edge tiles) are
+    partitioned across a ring mesh; each device keeps its sparse tile
+    stripe and accumulator resident while source-feature shards rotate
+    with ppermute.  `device_budget_bytes` is per shard and is checked
+    against the *actually built* plan (the a-priori closed form in
+    `dense_footprint_bytes` is a dense-stripe upper bound): over-budget
+    plans spill to the streamed tiled executor or raise."""
+    from repro.core.dataflow import (build_ring_tile_shards,
+                                     make_ring_tiled_aggregate,
+                                     ring_feature_bytes)
+    from repro.distributed.sharding import ring_mesh
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    h = out_dim if out_dim is not None else cfg.out_dim
+    if mesh is None:
+        mesh = ring_mesh(cfg.ring_shards, cfg.ring_axis)
+    p = int(mesh.devices.size)
+    if plan is None:
+        plan = build_ring_tile_shards(g, p, tile=cfg.tile)
+    need = plan.device_bytes() + ring_feature_bytes(plan.n_loc,
+                                                    cfg.in_dim, h)
+    if cfg.device_budget_bytes and need > cfg.device_budget_bytes:
+        if not cfg.auto_spill:
+            raise DeviceBudgetExceeded(
+                f"ring backend needs ~{need} device bytes per shard "
+                f"({p} shards), budget is {cfg.device_budget_bytes} "
+                f"per shard (more shards shrink the stripe; "
+                f"auto_spill=True streams tiles out-of-core instead)")
+        return prepare_tiled(g, cfg, out_dim)
+    spec = NamedSharding(mesh, P(cfg.ring_axis))
+    d: Dict[str, Any] = {
+        "n": g.num_vertices, "backend": "ring",
+        "ring_blocks": jax.device_put(plan.blocks, spec),
+        "ring_tile_row": jax.device_put(plan.tile_row, spec),
+        "ring_tile_col": jax.device_put(plan.tile_col, spec),
+        "ring_counts": jax.device_put(plan.in_counts, spec),
+        "ring_fn": make_ring_tiled_aggregate(mesh, cfg.ring_axis,
+                                             cfg.aggregate_op,
+                                             plan.q_loc, plan.tile),
+        "ring_meta": {"shards": p, "padded": plan.padded_vertices,
+                      "mesh": mesh, "tile": plan.tile,
+                      "q_loc": plan.q_loc, "s_max": plan.s_max,
+                      "nnzb": plan.nnzb, "device_bytes": need,
+                      "stats": plan.stats(cfg.in_dim, h)},
+    }
+    return d
+
+
 def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
     """Host-side 'format converter': build the device-side graph dict for
     the chosen backend, including the adaptive tile-schedule decision and
     the device-budget spill to the streamed tiled backend."""
     backend = cfg.backend
     h = out_dim if out_dim is not None else cfg.out_dim
-    if cfg.device_budget_bytes and backend != "tiled":
+    if cfg.device_budget_bytes and backend not in ("tiled", "ring"):
+        # (the ring gate lives in prepare_ring: it prices the actual
+        # per-shard plan, not the closed-form upper bound)
         need = dense_footprint_bytes(g.num_vertices, g.num_edges,
                                      cfg.in_dim, h, backend,
                                      tile=cfg.tile,
@@ -292,22 +353,5 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
                             "order": order, "tile": b.tile}
         return d
     if backend == "ring":
-        # Pod-scale RER (DESIGN.md C2): the adjacency is dense-sharded
-        # into (P, P, n_loc, n_loc) ring blocks; vertex features rotate
-        # around the device ring while each device reduces its dst rows.
-        from repro.core.dataflow import (make_ring_aggregate,
-                                         shard_adjacency_for_ring)
-        from repro.distributed.sharding import ring_mesh
-        if cfg.aggregate_op == "mean":
-            raise ValueError("ring backend supports sum/max aggregation")
-        mesh = ring_mesh(cfg.ring_shards, cfg.ring_axis)
-        p = mesh.devices.size
-        shards = shard_adjacency_for_ring(g.dense_adjacency(), p)
-        d["dense_shards"] = jnp.asarray(shards)
-        d["axis"] = cfg.ring_axis
-        d["ring_meta"] = {"shards": p, "padded": p * shards.shape[-1],
-                          "mesh": mesh}
-        d["ring_fn"] = make_ring_aggregate(mesh, cfg.ring_axis,
-                                           op=cfg.aggregate_op)
-        return d
+        return prepare_ring(g, cfg, out_dim)
     raise ValueError(backend)

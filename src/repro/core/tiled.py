@@ -52,9 +52,17 @@ class DeviceBudgetExceeded(RuntimeError):
 
 def dense_footprint_bytes(num_vertices: int, num_edges: int, in_dim: int,
                           out_dim: int, backend: str = "segment",
-                          tile: int = 256, has_val: bool = True) -> int:
+                          tile: int = 256, has_val: bool = True,
+                          num_shards: int = 1) -> int:
     """Device bytes a *dense* (graph-resident) backend needs — the gate
-    that decides when to spill to the streamed tiled executor."""
+    that decides when to spill to the streamed tiled executor.
+
+    For the ring-tiled backend the estimate is *per shard* of a
+    `num_shards`-device ring (the budget is per device): one feature
+    shard plus its ppermute double buffer and accumulator, and an upper
+    bound on the device-resident tile stripe (`prepare_graph` refines
+    the tile term with the actually-built plan before deciding to
+    spill — this closed form is for sizing without a build)."""
     n, e, f, h = num_vertices, num_edges, in_dim, out_dim
     feat = 4 * n * (f + h)                    # resident X and H
     if backend == "segment":
@@ -65,7 +73,17 @@ def dense_footprint_bytes(num_vertices: int, num_edges: int, in_dim: int,
         nnzb_ub = min(q * q, max(e, 1))
         return feat + 4 * nnzb_ub * tile * tile
     if backend == "ring":
-        return feat + 4 * n * n
+        p = max(num_shards, 1)
+        n_loc_raw = -(-n // p)
+        t = max(1, min(tile, n_loc_raw))
+        q_loc = -(-n_loc_raw // t)
+        n_loc = q_loc * t
+        q = p * q_loc
+        # stripe upper bound: min(dense stripe, every edge in its own
+        # tile, padding replicating the worst (dst, src) pair P times)
+        per_dev_tiles = min(q_loc * q, p * max(e, 1))
+        return (4 * n_loc * (2 * f + h)
+                + 4 * per_dev_tiles * t * t + 8 * per_dev_tiles)
     raise ValueError(backend)
 
 

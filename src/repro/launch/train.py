@@ -10,6 +10,13 @@ tolerance, assembled for any assigned architecture.
     PYTHONPATH=src python -m repro.launch.train --arch qwen2_72b \
         --batch 256 --seq 4096 --steps 1000 --ckpt-dir /ckpt/qwen2
 
+    # GNN mode: train an EnGN stack on any aggregation backend,
+    # including the sharded ring-tiled mesh backend (DESIGN.md C2) —
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8 gives a CPU
+    # stand-in mesh:
+    PYTHONPATH=src python -m repro.launch.train --gnn gcn \
+        --gnn-backend ring --dataset pubmed --steps 100
+
 Features wired in: 2-D sharded train step (FSDP x TP + sequence
 parallel), gradient accumulation for memory, WSD/cosine schedule per
 config, atomic checkpoints with exact data replay, straggler logging,
@@ -81,19 +88,153 @@ def build(arch: str, *, smoke: bool, batch: int, seq: int, steps: int,
     return mesh, jit_step, {"params": params, "opt": opt}, data, cfg
 
 
+def build_gnn(*, model: str, dataset: str, backend: str, steps: int,
+              hidden: int = 32, batch: int = 256,
+              ring_shards=None, device_budget_bytes=None,
+              max_vertices: int = 4000, max_edges: int = 30_000,
+              peak_lr: float = 5e-3, seed: int = 0):
+    """Assemble (train_step, init_state, data, graph_dict, aux) for a
+    2-layer EnGN stack on any aggregation backend — the GNN counterpart
+    of `build`.  `backend="ring"` trains on the sharded ring-tiled mesh
+    (gradients flow through the ppermute rotation: the ring schedule is
+    a scan, so reverse-mode AD works across shards); a
+    `device_budget_bytes` per-shard budget composes with it exactly as
+    in inference (spill to the streamed executor)."""
+    from repro.core.engn import prepare_graph
+    from repro.core.models import apply_stack, init_stack, make_gnn_stack
+    from repro.data.pipeline import GraphNodeStream
+    from repro.graphs.generate import make_dataset, random_features
+    from repro.training.optimizer import (AdamWConfig, adamw_update,
+                                          clip_by_global_norm,
+                                          init_opt_state)
+    from repro.training.schedule import cosine_schedule
+
+    g, f, classes = make_dataset(dataset, max_vertices=max_vertices,
+                                 max_edges=max_edges)
+    f = min(f, 128)
+    x = jnp.asarray(random_features(g.num_vertices, f, seed=seed))
+    gn = g.gcn_normalized()
+
+    # synthetic ground truth from a hidden teacher (segment reference)
+    teacher = make_gnn_stack("gcn", [f, 16, classes])
+    tp = init_stack(teacher, jax.random.key(42))
+    gd_ref = prepare_graph(gn, teacher[0].cfg)
+    y_true = jnp.argmax(apply_stack(teacher, tp, gd_ref, x), -1)
+
+    layers = make_gnn_stack(model, [f, hidden, classes], backend=backend)
+    for layer in layers:
+        layer.cfg.ring_shards = ring_shards
+        layer.cfg.device_budget_bytes = device_budget_bytes
+    params = init_stack(layers, jax.random.key(seed))
+    gd = prepare_graph(gn, layers[0].cfg, out_dim=hidden)
+    opt_cfg = AdamWConfig(weight_decay=0.01)
+
+    def loss_fn(ps, nodes, labels):
+        logits = apply_stack(layers, ps, gd, x)[nodes]
+        ll = jax.nn.log_softmax(logits, -1)
+        return -jnp.mean(jnp.take_along_axis(ll, labels[:, None], 1))
+
+    if gd.get("backend") == "tiled":
+        # the streamed executor is a host loop with no reverse-mode
+        # path: fail at build time, not deep inside the first grad trace
+        raise NotImplementedError(
+            "training cannot stream through the tiled executor (host "
+            "loop, no reverse-mode AD); raise the per-shard "
+            "device_budget_bytes, add ring shards to shrink the "
+            "per-device stripe, or train with backend='segment'")
+
+    def train_step(ps, opt, batch):
+        nodes = jnp.asarray(batch["nodes"])
+        labels = y_true[nodes]
+        loss, grads = jax.value_and_grad(loss_fn)(ps, nodes, labels)
+        grads, _ = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        lr = cosine_schedule(opt["count"] + 1, peak_lr=peak_lr,
+                             warmup=min(20, steps), total=steps)
+        ps, opt = adamw_update(opt_cfg, grads, opt, ps, lr)
+        return ps, opt, {"loss": loss, "lr": lr}
+
+    step = jax.jit(train_step)
+    data = GraphNodeStream(g.num_vertices, classes, batch=batch, seed=1)
+    state = {"params": params, "opt": init_opt_state(params)}
+    aux = {"layers": layers, "graph": gd, "x": x, "y_true": y_true,
+           "num_classes": classes}
+    return step, state, data, gd, aux
+
+
+def run_gnn(args) -> None:
+    """--gnn entry point: fault-tolerant GNN training on the chosen
+    aggregation backend (ring = the sharded ring-tiled device mesh)."""
+    import tempfile
+    step, state, data, gd, aux = build_gnn(
+        model=args.gnn, dataset=args.dataset, backend=args.gnn_backend,
+        steps=args.steps, hidden=args.gnn_hidden, batch=args.batch,
+        ring_shards=args.gnn_shards,
+        device_budget_bytes=args.device_budget or None)
+    meta = gd.get("ring_meta") or gd.get("tiled_meta") or {}
+    shown = {k: v for k, v in meta.items() if k not in ("mesh", "stats")}
+    print(f"gnn={args.gnn} backend={gd.get('backend')} "
+          f"meta={shown}", flush=True)
+
+    losses = []
+
+    def logged(ps, opt, batch):
+        ps, opt, m = step(ps, opt, batch)
+        losses.append(float(m["loss"]))
+        if len(losses) % 20 == 0:
+            print(f"step {len(losses):4d}  loss {losses[-1]:.4f}",
+                  flush=True)
+        return ps, opt, m
+
+    ckdir = args.ckpt_dir or tempfile.mkdtemp(prefix="engn_gnn_ckpt_")
+    mgr = CheckpointManager(ckdir, keep=2, async_save=True)
+    runner = FaultTolerantRunner(logged, mgr,
+                                 FaultConfig(ckpt_every=args.ckpt_every))
+    start = 0
+    if mgr.latest_step() is not None:
+        state, meta_d, start = mgr.restore(state)
+        data.seek(meta_d.get("cursor", start))
+        print(f"restored from step {start}")
+    state, last = runner.run(state, data, num_steps=args.steps,
+                             start_step=start)
+    mgr.wait()
+    traj = (f"loss {losses[0]:.3f} -> {losses[-1]:.3f}" if losses
+            else "no steps run (checkpoint already at --steps)")
+    print(f"done: {last} steps, {traj}, saves={runner.stats['saves']}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--arch", choices=ARCH_IDS,
+                    help="transformer architecture (LM mode)")
+    ap.add_argument("--gnn", choices=["gcn", "gs_pool", "grn"],
+                    help="GNN mode: train an EnGN stack instead of an LM")
+    ap.add_argument("--gnn-backend", default="segment",
+                    choices=["segment", "blocked", "fused", "ring",
+                             "tiled"])
+    ap.add_argument("--gnn-shards", type=int, default=None,
+                    help="ring backend: devices in the ring (default all)")
+    ap.add_argument("--gnn-hidden", type=int, default=32)
+    ap.add_argument("--dataset", default="pubmed")
+    ap.add_argument("--device-budget", type=int, default=0,
+                    help="per-shard device budget in bytes (0 = off)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="default: 4 (LM mode) / 256 (GNN mode)")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--micro-steps", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--lr", type=float, default=3e-4)
     args = ap.parse_args()
+
+    if args.gnn:
+        args.batch = args.batch if args.batch is not None else 256
+        return run_gnn(args)
+    if not args.arch:
+        ap.error("one of --arch or --gnn is required")
+    args.batch = args.batch if args.batch is not None else 4
 
     mesh, step, state, data, cfg = build(
         args.arch, smoke=args.smoke, batch=args.batch, seq=args.seq,

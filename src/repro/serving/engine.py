@@ -23,6 +23,14 @@ batch whose L-hop subgraph would not fit on device (hub seeds can pull
 in a large fraction of the graph) is executed through the streamed
 tiled executor instead of OOMing — same results, bounded device
 footprint, counted in `stats["tiled_batches"]`.
+
+Shard-aware gate (DESIGN.md C2): with `ring_shards` additionally set,
+an over-budget batch first tries the sharded ring-tiled backend — the
+budget is per *shard*, so a P-device ring holds a P-times-larger
+subgraph on the mesh before the engine has to fall back to host
+streaming.  Batches served this way count in `stats["ring_batches"]`;
+only when even the per-shard stripe exceeds the budget does the batch
+drop to the tiled executor.
 """
 from __future__ import annotations
 
@@ -56,6 +64,11 @@ class ServingConfig:
     # executor (None/0 disables the guard)
     device_budget_bytes: Optional[int] = None
     tiled_tile: int = 128             # interval size for tiled fallback
+    # shard-aware gate: with ring_shards set, over-budget batches first
+    # try the sharded ring-tiled backend (budget interpreted per shard)
+    # before dropping to the streamed tiled executor
+    ring_shards: Optional[int] = None
+    ring_tile: int = 32               # tile size for per-batch ring plans
 
 
 def _next_pow2(n: int) -> int:
@@ -118,7 +131,7 @@ class GNNServingEngine:
         self._compiled: Dict = {}
         self.stats = {"subgraphs": 0, "subgraph_vertices": 0,
                       "subgraph_edges": 0, "compiles": 0,
-                      "tiled_batches": 0}
+                      "tiled_batches": 0, "ring_batches": 0}
 
     # -- public API --------------------------------------------------------
     def submit(self, rid: int, vertex_ids: np.ndarray):
@@ -185,6 +198,9 @@ class GNNServingEngine:
         xs = self.x[sub.vertices]
         budget = self.config.device_budget_bytes
         if budget and self._subgraph_footprint(g) > budget:
+            ring_gd = self._try_ring_plan(g)
+            if ring_gd is not None:
+                return self._run_subgraph_ring(sub, xs, ring_gd)
             return self._run_subgraph_tiled(sub, xs)
         if not self._can_bucket:
             gd = {"n": g.num_vertices, "src": jnp.asarray(g.src),
@@ -246,6 +262,53 @@ class GNNServingEngine:
         return max(dense_footprint_bytes(
             n, e, layer.cfg.in_dim, layer.cfg.out_dim, "segment")
             for layer in self.layers)
+
+    def _try_ring_plan(self, g: COOGraph):
+        """Shard-aware footprint gate (DESIGN.md C2): price the actual
+        per-shard ring-tiled plan for this batch's subgraph and return
+        a prepared ring graph dict when it fits the per-shard budget,
+        else None (the batch then falls back to host streaming).  The
+        ring aggregate is built per aggregation op, so mixed-op stacks
+        skip the ring path."""
+        p = self.config.ring_shards
+        if not p:
+            return None
+        ops = {ly.cfg.aggregate_op for ly in self.layers}
+        if len(ops) != 1:
+            return None
+        from repro.core.dataflow import (build_ring_tile_shards,
+                                         ring_stripe_bytes)
+        from repro.core.engn import EnGNConfig, prepare_ring
+        from repro.distributed.sharding import ring_mesh
+        try:
+            mesh = ring_mesh(p)
+        except ValueError:
+            return None                       # fewer devices than shards
+        # price before building: one O(E) binning pass, no densify —
+        # an over-budget batch pays nothing for the rejected plan
+        dims = ([self.layers[0].cfg.in_dim]
+                + [ly.cfg.out_dim for ly in self.layers])
+        need = ring_stripe_bytes(g, p, tile=self.config.ring_tile,
+                                 in_dim=max(dims), out_dim=max(dims))
+        if need > self.config.device_budget_bytes:
+            return None
+        plan = build_ring_tile_shards(g, p, tile=self.config.ring_tile)
+        cfg = EnGNConfig(in_dim=self.layers[0].cfg.in_dim,
+                         out_dim=self.layers[-1].cfg.out_dim,
+                         aggregate_op=ops.pop(), backend="ring",
+                         tile=self.config.ring_tile, ring_shards=p)
+        return prepare_ring(g, cfg, plan=plan, mesh=mesh)
+
+    def _run_subgraph_ring(self, sub, xs: np.ndarray, gd) -> np.ndarray:
+        """Run the stack over the subgraph on the ring mesh: each device
+        holds one shard's tile stripe, feature shards rotate with
+        ppermute — the per-shard budget admits subgraphs ~P x larger
+        than one device before host streaming is needed."""
+        y = jnp.asarray(np.asarray(xs, np.float32))
+        for layer, p in zip(self.layers, self.params):
+            y = layer.apply(p, gd, y)
+        self.stats["ring_batches"] += 1
+        return np.asarray(y[:sub.num_seeds])
 
     def _run_subgraph_tiled(self, sub, xs: np.ndarray) -> np.ndarray:
         """Run the stack through the streamed tiled executor: the

@@ -303,3 +303,63 @@ def test_engine_rejects_non_segment_backend():
     params = init_stack(layers, jax.random.key(0))
     with pytest.raises(ValueError, match="segment-backend"):
         GNNServingEngine(g, random_features(40, 8, 1), layers, params)
+
+
+def test_engine_ring_gate_serves_oversized_batches_on_the_mesh():
+    """Shard-aware footprint gate (DESIGN.md C2): with `ring_shards`
+    set, a batch whose subgraph exceeds the per-batch budget runs on
+    the sharded ring-tiled backend (budget is per shard) instead of
+    dropping straight to host streaming — and still matches the
+    unbudgeted reference engine."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.models import make_gnn_stack, init_stack
+    from repro.graphs.format import COOGraph
+    from repro.graphs.generate import random_features
+    from repro.serving.engine import GNNServingEngine, ServingConfig
+
+    # dense-ish graph: blocked ring tiles are efficient, so the ring
+    # plan undercuts the segment gather buffers at the bucketed shapes
+    rng = np.random.default_rng(0)
+    n, e = 200, 8000
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    g = COOGraph(n, src, dst).gcn_normalized()
+    x = random_features(n, 16, seed=1)
+    layers = make_gnn_stack("gcn", [16, 8, 4])
+    params = init_stack(layers, jax.random.key(0))
+    reqs = [np.arange(25, dtype=np.int32), np.array([5, 190], np.int32)]
+
+    ref = GNNServingEngine(g, x, layers, params,
+                           ServingConfig(batch_size=8))
+    for i, ids in enumerate(reqs):
+        ref.submit(i, ids)
+    want = {r.rid: r.outputs for r in ref.drain()}
+
+    eng = GNNServingEngine(
+        g, x, layers, params,
+        ServingConfig(batch_size=8, device_budget_bytes=400_000,
+                      ring_shards=1, ring_tile=32))
+    for i, ids in enumerate(reqs):
+        eng.submit(i, ids)
+    got = {r.rid: r.outputs for r in eng.drain()}
+    assert eng.stats["ring_batches"] > 0
+    assert eng.stats["tiled_batches"] == 0
+    for rid in want:
+        np.testing.assert_allclose(got[rid], want[rid],
+                                   rtol=1e-4, atol=1e-5)
+
+    # a budget even the per-shard ring stripe cannot fit drops the
+    # batch to the streamed tiled executor instead
+    tiny = GNNServingEngine(
+        g, x, layers, params,
+        ServingConfig(batch_size=8, device_budget_bytes=50_000,
+                      ring_shards=1, ring_tile=32, tiled_tile=32))
+    for i, ids in enumerate(reqs):
+        tiny.submit(i, ids)
+    got2 = {r.rid: r.outputs for r in tiny.drain()}
+    assert tiny.stats["ring_batches"] == 0
+    assert tiny.stats["tiled_batches"] > 0
+    for rid in want:
+        np.testing.assert_allclose(got2[rid], want[rid],
+                                   rtol=1e-4, atol=1e-5)

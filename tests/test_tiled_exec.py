@@ -168,8 +168,11 @@ def test_enwiki_scale_runs_tiled_where_dense_fails():
     for backend in ("segment", "blocked", "fused", "ring"):
         assert dense_footprint_bytes(gn.num_vertices, gn.num_edges, f, 64,
                                      backend) > budget
+        # ring_shards pinned: the ring budget is per shard, so the gate
+        # depends on the ring size (the multi-device CI job sees 8)
         strict = EnGNConfig(in_dim=f, out_dim=64, backend=backend,
-                            device_budget_bytes=budget, auto_spill=False)
+                            ring_shards=1, device_budget_bytes=budget,
+                            auto_spill=False)
         with pytest.raises(DeviceBudgetExceeded):
             prepare_graph(gn, strict)
 
