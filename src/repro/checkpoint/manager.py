@@ -127,8 +127,8 @@ class CheckpointManager:
             if tuple(arr.shape) != tuple(like_shape):
                 raise ValueError(
                     f"{name}: checkpoint shape {arr.shape} != {like_shape}")
-            if np.ndim(like) == 0 and not isinstance(like, (np.ndarray,)) \
-                    and not hasattr(like, "dtype"):
+            if (np.ndim(like) == 0 and not isinstance(like, (np.ndarray,))
+                    and not hasattr(like, "dtype")):
                 leaves.append(arr.item())   # plain python scalar leaf
             else:
                 leaves.append(arr)

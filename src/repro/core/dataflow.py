@@ -75,8 +75,8 @@ def ring_aggregate_dense(a_blocks: jnp.ndarray, x_shard: jnp.ndarray,
     """
     p = jax.lax.psum(1, axis_name)
     me = jax.lax.axis_index(axis_name)
-    init_acc = jnp.zeros(x_shard.shape, jnp.float32) if op == "sum" else \
-        jnp.full(x_shard.shape, -jnp.inf, jnp.float32)
+    init_acc = (jnp.zeros(x_shard.shape, jnp.float32) if op == "sum"
+                else jnp.full(x_shard.shape, -jnp.inf, jnp.float32))
     # mark the carry as device-varying so the fori_loop carry types match
     # after the ppermute
     init_acc = _pvary(init_acc, axis_name)

@@ -137,8 +137,8 @@ class EnGNLayer:
         linear_sum = (self.cfg.aggregate_op == "sum"
                       and type(self).feature_extraction
                       is EnGNLayer.feature_extraction)
-        if linear_sum and backend == "fused" \
-                and self.dasr_order() == "fau":
+        if (linear_sum and backend == "fused"
+                and self.dasr_order() == "fau"):
             # Fig. 8 stage overlap: extraction fused into the aggregate
             # sweep (P = X@W lives only in VMEM per tile)
             from repro.kernels.fused_engn import fused_engn_layer

@@ -213,8 +213,8 @@ class TiledExecutor:
         if not self.budget_bytes:
             return self.chunk
         t, c = self.store.tile, self.chunk
-        while c > 1 and _step_bytes(t, c, dim, self.x_cache_cap) \
-                > self.budget_bytes:
+        while (c > 1 and _step_bytes(t, c, dim, self.x_cache_cap)
+                > self.budget_bytes):
             c = c // 2
         if _step_bytes(t, c, dim, self.x_cache_cap) > self.budget_bytes:
             raise DeviceBudgetExceeded(

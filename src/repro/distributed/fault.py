@@ -43,8 +43,8 @@ class StepTimer:
         self.ewma: Optional[float] = None
 
     def observe(self, dt: float):
-        self.ewma = dt if self.ewma is None else \
-            (1 - self.alpha) * self.ewma + self.alpha * dt
+        self.ewma = (dt if self.ewma is None
+                     else (1 - self.alpha) * self.ewma + self.alpha * dt)
 
     def deadline(self) -> Optional[float]:
         return None if self.ewma is None else self.ewma * self.factor

@@ -129,12 +129,12 @@ class SubgraphExtractor:
         vertices = np.concatenate(order).astype(np.int32)
         local = np.full(self.g.num_vertices, -1, np.int32)
         local[vertices] = np.arange(vertices.size, dtype=np.int32)
-        src = local[np.concatenate(edges_src)] if edges_src else \
-            np.zeros(0, np.int32)
-        dst = local[np.concatenate(edges_dst)] if edges_dst else \
-            np.zeros(0, np.int32)
-        val = np.concatenate(edges_val) if edges_val else \
-            np.zeros(0, np.float32)
+        src = (local[np.concatenate(edges_src)] if edges_src
+               else np.zeros(0, np.int32))
+        dst = (local[np.concatenate(edges_dst)] if edges_dst
+               else np.zeros(0, np.int32))
+        val = (np.concatenate(edges_val) if edges_val
+               else np.zeros(0, np.float32))
         sub = COOGraph(int(vertices.size), src, dst,
                        val if self.g.val is not None else None)
         return Subgraph(sub, vertices, int(seeds.size))

@@ -17,8 +17,8 @@ def _is_cpu() -> bool:
 def _fused_jit(x, w, b, *, act, tn, th, tf, interpret):
     n, f = x.shape
     h = w.shape[1]
-    pn, pf, ph = (-n) % tn if n > tn else 0, (-f) % tf if f > tf else 0, \
-        (-h) % th if h > th else 0
+    pn, pf, ph = ((-n) % tn if n > tn else 0, (-f) % tf if f > tf else 0,
+                  (-h) % th if h > th else 0)
     # for dims smaller than a tile the kernel shrinks the tile instead
     if pn or pf or ph:
         x = jnp.pad(x, ((0, pn), (0, pf)))

@@ -76,8 +76,8 @@ class ModelConfig:
             elif self.family == "hybrid":
                 kinds.append("attn" if (self.attn_every and li % self.attn_every == 0)
                              else "mamba")
-            elif self.family == "vlm" and self.cross_attn_every and \
-                    li % self.cross_attn_every == self.cross_attn_every - 1:
+            elif (self.family == "vlm" and self.cross_attn_every
+                  and li % self.cross_attn_every == self.cross_attn_every - 1):
                 kinds.append("cross")
             else:
                 kinds.append("attn")
@@ -105,5 +105,5 @@ class ModelConfig:
         """Fraction of FFN params active per token (MoE top-k / E)."""
         if self.n_experts == 0:
             return 1.0
-        return (self.top_k + self.n_shared_experts) / \
-            (self.n_experts + self.n_shared_experts)
+        return ((self.top_k + self.n_shared_experts)
+                / (self.n_experts + self.n_shared_experts))

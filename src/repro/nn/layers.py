@@ -183,8 +183,8 @@ def cross_kv(cfg: ModelConfig, p, memory, sc: Constrainer = no_sc):
     if cfg.qkv_bias:
         k = k + p["bk"].astype(memory.dtype)
         v = v + p["bv"].astype(memory.dtype)
-    return sc(k, ("batch", None, "kv_heads", None)), \
-        sc(v, ("batch", None, "kv_heads", None))
+    return (sc(k, ("batch", None, "kv_heads", None)),
+            sc(v, ("batch", None, "kv_heads", None)))
 
 
 # ---------------------------------------------------------------- MLP
@@ -197,7 +197,7 @@ def mlp_specs(d: int, ff: int):
 
 
 def mlp(p, x, sc: Constrainer = no_sc):
-    h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * \
-        (x @ p["w_up"].astype(x.dtype))
+    h = (jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+         * (x @ p["w_up"].astype(x.dtype)))
     h = sc(h, ("batch", None, "mlp"))
     return h @ p["w_down"].astype(x.dtype)

@@ -75,8 +75,8 @@ def mamba_train(cfg: ModelConfig, p, x, sc: Constrainer = no_sc):
     def step(h, xs):
         xt, dtt, bt, ct = xs                           # (B,di) (B,di) (B,n) (B,n)
         da = jnp.exp(dtt.astype(jnp.float32)[:, :, None] * a[None])
-        h = h * da + (dtt * xt).astype(jnp.float32)[:, :, None] * \
-            bt.astype(jnp.float32)[:, None, :]
+        h = (h * da + (dtt * xt).astype(jnp.float32)[:, :, None]
+             * bt.astype(jnp.float32)[:, None, :])
         y = jnp.einsum("bdn,bn->bd", h, ct.astype(jnp.float32))
         return h, y.astype(xt.dtype)
 
@@ -130,8 +130,8 @@ def mamba_decode(cfg: ModelConfig, p, x, conv_state, ssm_state,
     dt, bmat, cmat = dt[:, 0], bmat[:, 0], cmat[:, 0]
     a = -jnp.exp(p["a_log"].astype(jnp.float32))
     da = jnp.exp(dt.astype(jnp.float32)[:, :, None] * a[None])
-    ssm_state = ssm_state * da + (dt * xc).astype(jnp.float32)[:, :, None] * \
-        bmat.astype(jnp.float32)[:, None, :]
+    ssm_state = (ssm_state * da + (dt * xc).astype(jnp.float32)[:, :, None]
+                 * bmat.astype(jnp.float32)[:, None, :])
     y = jnp.einsum("bdn,bn->bd", ssm_state, cmat.astype(jnp.float32)
                    ).astype(x.dtype)
     y = y + xc * p["d_skip"].astype(x.dtype)

@@ -96,8 +96,9 @@ def moe_ffn_dense(cfg: ModelConfig, p, x: jnp.ndarray,
     buf = buf[:-1].reshape(e, cap, d)
     buf = sc(buf, ("experts", None, None))
 
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))) \
-        * jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                                p["w_gate"].astype(x.dtype)))
+         * jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype)))
     out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
     out_buf = sc(out_buf, ("experts", None, None))
 

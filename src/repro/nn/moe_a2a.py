@@ -119,9 +119,9 @@ def moe_ffn_a2a(cfg: ModelConfig, p, x: jnp.ndarray, mesh: Mesh, rules,
                                   tiled=False)
         # expert compute on (E_loc, M*cap, D)
         h_in = recv.transpose(1, 0, 2, 3).reshape(e_loc, m * cap, d)
-        act = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h_in,
-                                     wg.astype(xs.dtype))) * \
-            jnp.einsum("ecd,edf->ecf", h_in, wu.astype(xs.dtype))
+        act = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", h_in,
+                                      wg.astype(xs.dtype)))
+               * jnp.einsum("ecd,edf->ecf", h_in, wu.astype(xs.dtype)))
         h_out = jnp.einsum("ecf,efd->ecd", act, wd.astype(xs.dtype))
         # reverse path
         back = h_out.reshape(e_loc, m, cap, d).transpose(1, 0, 2, 3)

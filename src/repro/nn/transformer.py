@@ -52,8 +52,8 @@ def _block_specs(cfg: ModelConfig, kind: str, is_moe: bool,
         # mamba-only archs (falcon) have no FFN; hybrid (jamba) does
         if cfg.d_ff > 0 or is_moe:
             sp["norm2"] = L.rmsnorm_specs(d)
-            sp["ffn"] = M.moe_specs(cfg) if is_moe else \
-                L.mlp_specs(d, cfg.d_ff)
+            sp["ffn"] = (M.moe_specs(cfg) if is_moe
+                         else L.mlp_specs(d, cfg.d_ff))
     return sp
 
 
@@ -130,8 +130,8 @@ def _apply_block(cfg: ModelConfig, kind: str, is_moe: bool, p, x,
         x = x + S.mamba_train(cfg, p["mamba"], h, sc)
     if decoder_cross:
         h = L.rmsnorm(p["norm_cross"], x, cfg.norm_eps)
-        mk, mv = extras["memory_kv"] if "memory_kv" in extras else \
-            L.cross_kv(cfg, p["crossdec"], extras["memory"], sc)
+        mk, mv = (extras["memory_kv"] if "memory_kv" in extras
+                  else L.cross_kv(cfg, p["crossdec"], extras["memory"], sc))
         x = x + L.attention_cross(cfg, p["crossdec"], h, mk, mv, sc, q_chunk)
     if "ffn" in p:
         h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
@@ -213,9 +213,9 @@ def _stack_scan(cfg: ModelConfig, params_layers, x, cos, sin, sc, extras,
                 kvs[f"slot{i}"] = {"k": kv[0], "v": kv[1]}
         return x, (kvs if collect_kv else None)
 
-    body = jax.checkpoint(period_body,
-                          policy=REMAT_POLICIES[REMAT_POLICY]) \
-        if remat else period_body
+    body = (jax.checkpoint(period_body,
+                           policy=REMAT_POLICIES[REMAT_POLICY])
+            if remat else period_body)
     x, kvs = jax.lax.scan(body, x, params_layers)
     return x, kvs
 

@@ -112,8 +112,8 @@ class GNNBatcher:
         if not self.queue:
             return []
         now = time.monotonic()
-        if not force and self.pending_vertices() < self.batch_size \
-                and now - self.queue[0].t_submit < self.max_wait_s:
+        if (not force and self.pending_vertices() < self.batch_size
+                and now - self.queue[0].t_submit < self.max_wait_s):
             return []
 
         # steps are synchronous, so every request enters with

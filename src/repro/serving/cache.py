@@ -43,8 +43,8 @@ class DegreeAwareCache:
             n_res = 0
         self.capacity = capacity
         self.lru_capacity = capacity - n_res
-        order = np.argsort(-np.asarray(degrees), kind="stable") \
-            if degrees is not None else np.zeros(0, np.int64)
+        order = (np.argsort(-np.asarray(degrees), kind="stable")
+                 if degrees is not None else np.zeros(0, np.int64))
         self.pinned_ids = frozenset(int(v) for v in order[:n_res])
         self._pinned: Dict[int, np.ndarray] = {}
         self._lru: "OrderedDict[int, np.ndarray]" = OrderedDict()

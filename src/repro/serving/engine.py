@@ -318,8 +318,8 @@ class GNNServingEngine:
         sparse edge lists (layer jit caches are shared across batches,
         so only the store build recurs)."""
         g = sub.graph
-        dims = [self.layers[0].cfg.in_dim] + \
-            [layer.cfg.out_dim for layer in self.layers]
+        dims = ([self.layers[0].cfg.in_dim]
+                + [layer.cfg.out_dim for layer in self.layers])
         ex = TiledExecutor(g, tile=self.config.tiled_tile,
                            budget_bytes=self.config.device_budget_bytes,
                            dim_hint=max(dims))
