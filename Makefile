@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test bench serve-example dev-deps
+.PHONY: check test bench bench-packed serve-example dev-deps
 
 # tier-1 gate — run on every PR (see .github/workflows/ci.yml)
 check:
@@ -11,6 +11,11 @@ test: check
 
 bench:
 	$(PYTHON) -m benchmarks.run
+
+# the packed-tile perf story only (C8): streamed + blocked + ring
+# packed-vs-dense rows, BENCH_4.json summary
+bench-packed:
+	$(PYTHON) -m benchmarks.run --only tiled,ring_tiled
 
 serve-example:
 	$(PYTHON) examples/serve_gnn.py

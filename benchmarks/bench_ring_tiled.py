@@ -1,6 +1,6 @@
-"""Sharded ring-tiled backend (C2) — weak/strong scaling across forced
-host-device meshes, with the analytic ring-traffic counters (RingStats,
-the device-mesh mirror of TiledStats).
+"""Sharded ring backend (C2 / C8) — weak/strong scaling across forced
+host-device meshes, packed vs dense ring stripes, with the analytic
+ring-traffic counters (RingStats, the device-mesh mirror of TiledStats).
 
 Each mesh size runs in a subprocess because the device count is fixed
 by XLA_FLAGS=--xla_force_host_platform_device_count before jax imports
@@ -20,7 +20,7 @@ from benchmarks.common import emit, pick
 _CHILD = textwrap.dedent("""
     import os, sys, time
     p = int(sys.argv[1]); n = int(sys.argv[2]); e = int(sys.argv[3])
-    f = int(sys.argv[4]); h = int(sys.argv[5])
+    f = int(sys.argv[4]); h = int(sys.argv[5]); fmt = sys.argv[6]
     os.environ["XLA_FLAGS"] = \\
         f"--xla_force_host_platform_device_count={p}"
     import jax, jax.numpy as jnp
@@ -40,6 +40,7 @@ _CHILD = textwrap.dedent("""
     g = g.gcn_normalized()
     x = jnp.asarray(random_features(n, f, seed=1))
     layer = make_gnn("gcn", f, h, backend="ring")
+    layer.cfg.tile_format = fmt
     params = layer.init(jax.random.key(0))
     gd = prepare_graph(g, layer.cfg)
     fn = jax.jit(lambda xx: layer.apply(params, gd, xx))
@@ -56,19 +57,22 @@ _CHILD = textwrap.dedent("""
           f" edges={g.num_edges}"
           f" shards={meta['shards']} tile={meta['tile']}"
           f" s_max={meta['s_max']} nnzb={meta['nnzb']}"
+          f" fmt={meta['tile_format']}"
+          f" fill={s['fill_factor']:.4f}"
           f" dev_bytes={meta['device_bytes']}"
           f" ppermute_bytes={s['ppermute_bytes']}"
           f" padded_tiles={s['padded_tiles']} tiles={s['tiles']}")
 """)
 
 
-def _run_child(p: int, n: int, e: int, f: int, h: int):
+def _run_child(p: int, n: int, e: int, f: int, h: int,
+               fmt: str = "auto"):
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     env.pop("XLA_FLAGS", None)
     r = subprocess.run(
         [sys.executable, "-c", _CHILD.replace("{smoke}", str(common.SMOKE)),
-         str(p), str(n), str(e), str(f), str(h)],
+         str(p), str(n), str(e), str(f), str(h), fmt],
         env=env, capture_output=True, text=True, timeout=600)
     if r.returncode != 0:
         raise RuntimeError(f"ring bench child (p={p}) failed:\n"
@@ -79,29 +83,42 @@ def _run_child(p: int, n: int, e: int, f: int, h: int):
 
 def run():
     f, h = (16, 8) if common.SMOKE else (64, 32)
-    n0, e0 = (512, 3000) if common.SMOKE else (4096, 60_000)
+    # the strong-scaling graph must look like a real power-law graph at
+    # this tile size (Q x Q grid with sparse tiles), not a 2x2 grid of
+    # hub-dense tiles — that is the regime the packed format targets
+    n0, e0 = (2048, 9000) if common.SMOKE else (4096, 60_000)
     nw, ew = (512, 3000) if common.SMOKE else (1024, 15_000)
     shard_counts = pick([1, 2, 4, 8], 2)
 
-    # strong scaling: fixed graph, growing ring
+    # strong scaling: fixed graph, growing ring — dense stripes vs
+    # packed stripes (C8) at every ring size
     for p in shard_counts:
-        r = _run_child(p, n0, e0, f, h)
-        us = float(r["us"])
-        emit(f"ring_tiled/strong/p{p}/us", round(us, 1),
-             f"tile={r['tile']} s_max={r['s_max']} nnzb={r['nnzb']} "
-             f"dev_mb={int(r['dev_bytes']) / 1e6:.2f}")
-        emit(f"ring_tiled/strong/p{p}/edges_per_s",
-             round(int(r["edges"]) / (us / 1e6), 1),
-             f"ppermute_mb={int(r['ppermute_bytes']) / 1e6:.2f} "
-             f"padded_tiles={r['padded_tiles']} tiles={r['tiles']}")
+        us = {}
+        for fmt in ("dense", "packed"):
+            r = _run_child(p, n0, e0, f, h, fmt=fmt)
+            us[fmt] = float(r["us"])
+            tag = "" if fmt == "dense" else "packed_"
+            emit(f"ring_tiled/strong/p{p}/{tag}us", round(us[fmt], 1),
+                 f"tile={r['tile']} s_max={r['s_max']} nnzb={r['nnzb']} "
+                 f"fill={r['fill']} "
+                 f"dev_mb={int(r['dev_bytes']) / 1e6:.2f}")
+            emit(f"ring_tiled/strong/p{p}/{tag}edges_per_s",
+                 round(int(r["edges"]) / (us[fmt] / 1e6), 1),
+                 f"ppermute_mb={int(r['ppermute_bytes']) / 1e6:.2f} "
+                 f"padded_tiles={r['padded_tiles']} tiles={r['tiles']}")
+        emit(f"ring_tiled/strong/p{p}/packed_speedup",
+             round(us["dense"] / max(us["packed"], 1.0), 3),
+             f"dense={us['dense']:.0f}us packed={us['packed']:.0f}us")
 
     # weak scaling: graph grows with the ring, per-shard work constant
+    # (tile_format=auto — the autotuned production configuration)
     for p in shard_counts:
-        r = _run_child(p, nw * p, ew * p, f, h)
+        r = _run_child(p, nw * p, ew * p, f, h, fmt="auto")
         us = float(r["us"])
         emit(f"ring_tiled/weak/p{p}/us", round(us, 1),
-             f"n={nw * p} e={r['edges']} "
+             f"n={nw * p} e={r['edges']} fmt={r['fmt']} "
              f"dev_mb={int(r['dev_bytes']) / 1e6:.2f}")
         emit(f"ring_tiled/weak/p{p}/edges_per_s",
              round(int(r["edges"]) / (us / 1e6), 1),
-             f"ppermute_mb={int(r['ppermute_bytes']) / 1e6:.2f}")
+             f"ppermute_mb={int(r['ppermute_bytes']) / 1e6:.2f} "
+             f"fill={r['fill']}")

@@ -7,11 +7,15 @@ bench-smoke job runs it and uploads the CSV as an artifact so the perf
 trajectory is recorded per PR.
 
 Emits ``name,value,derived`` CSV rows (also saved to
-experiments/bench_results.csv).
+experiments/bench_results.csv), plus a machine-readable ``BENCH_4.json``
+summary — per-bench best throughput, packed-vs-dense speedups and the
+parity gates — so the perf trajectory can be diffed across PRs without
+parsing the CSV.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 from pathlib import Path
@@ -67,7 +71,45 @@ def main() -> int:
     out.parent.mkdir(exist_ok=True)
     out.write_text("name,value,derived\n" + "\n".join(rows()) + "\n")
     print(f"# wrote {out}")
+
+    summary = summarize(rows(), smoke=args.smoke)
+    Path("BENCH_4.json").write_text(json.dumps(summary, indent=2,
+                                               sort_keys=True) + "\n")
+    print("# wrote BENCH_4.json")
     return 0
+
+
+def summarize(csv_rows, smoke: bool) -> dict:
+    """Condense the CSV rows into the PR's perf-trajectory point: the
+    best throughput per bench, every packed-vs-dense speedup, and the
+    packed parity gates."""
+    parsed = []
+    for row in csv_rows:
+        name, value, derived = row.split(",", 2)
+        try:
+            parsed.append((name, float(value), derived))
+        except ValueError:
+            parsed.append((name, value, derived))
+    best = {}
+    for name, value, _ in parsed:
+        if not isinstance(value, float):
+            continue
+        if name.endswith("edges_per_s") or name.endswith("requests_per_s"):
+            bench = name.split("/", 1)[0]
+            if value > best.get(bench, {}).get("value", 0.0):
+                best[bench] = {"row": name, "value": value}
+    return {
+        "issue": 4,
+        "smoke": smoke,
+        "best_throughput": best,
+        "packed_vs_dense": {n: v for n, v, _ in parsed
+                            if "packed_speedup" in n},
+        "parity": {n: v for n, v, _ in parsed if "parity" in n},
+        "fill_factor": {n: v for n, v, _ in parsed
+                        if "fill_factor" in n},
+        "autotune": {n: d for n, _, d in parsed if "autotune" in n},
+        "rows": len(parsed),
+    }
 
 
 if __name__ == "__main__":

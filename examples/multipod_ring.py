@@ -34,12 +34,15 @@ def main():
     meta = gd["ring_meta"]
     stats = meta["stats"].as_dict()
     dense_mb = 4 * g.num_vertices ** 2 / 1e6
-    print(f"ring: {meta['shards']} shards, tile {meta['tile']}, "
-          f"{meta['nnzb']} edge tiles "
+    unit = ("packed edge entries" if meta["tile_format"] == "packed"
+            else "edge tiles")
+    print(f"ring: {meta['shards']} shards, {meta['tile_format']} "
+          f"stripes, {meta['nnzb']} {unit} "
           f"({meta['device_bytes'] / 1e6:.1f} MB/shard vs "
           f"{dense_mb:.0f} MB dense A)")
     print(f"per aggregate: {stats['ring_steps']} ppermute hops, "
-          f"{stats['ppermute_bytes'] / 1e6:.1f} MB rotated")
+          f"{stats['ppermute_bytes'] / 1e6:.1f} MB rotated, "
+          f"fill factor {stats['fill_factor']:.3f}")
 
     fn = jax.jit(lambda xx: layer.apply(params, gd, xx))
     y = np.asarray(jax.block_until_ready(fn(jnp.asarray(x))))

@@ -16,14 +16,24 @@ Two implementations share the dataflow:
   adjacency.  O(N^2 / P) device bytes per shard; oracle for tests and
   for `bench_scaling`.
 * the **sharded ring-tiled backend** (`build_ring_tile_shards` /
-  `make_ring_tiled_aggregate`) — the production path behind
-  `EnGNConfig(backend="ring")`.  Destination vertices are partitioned
-  into P shards; each device keeps only the *non-empty* T x T edge
-  tiles of its stripe (the same sparse per-tile edge lists as
-  `graphs.partition.EdgeTileStore`, densified once at build), its
-  accumulator stays resident, and source-feature shards rotate around
-  the ring.  No dense A, no full-graph replication: per-shard device
-  bytes are O(nnzb_stripe * T^2 + n_loc * (F + H)).
+  `make_ring_tiled_aggregate`) — the dense-tile path behind
+  `EnGNConfig(backend="ring", tile_format="dense")`.  Destination
+  vertices are partitioned into P shards; each device keeps only the
+  *non-empty* T x T edge tiles of its stripe (the same sparse per-tile
+  edge lists as `graphs.partition.EdgeTileStore`, densified once at
+  build), its accumulator stays resident, and source-feature shards
+  rotate around the ring.  No dense A, no full-graph replication:
+  per-shard device bytes are O(nnzb_stripe * T^2 + n_loc * (F + H)).
+
+* the **packed ring backend** (`build_packed_ring_shards` /
+  `make_ring_packed_aggregate`, DESIGN.md C8) — what
+  `tile_format="auto"` picks on sparse graphs.  Each (dst, src) shard
+  pair carries its merged edge entries `(row_local, col_local, val)`
+  directly, padded to the pow2 nnz bucket `l_max` instead of `s_max`
+  zero *tiles*: per-shard device bytes drop from O(P s_max T^2) to
+  O(P l_max * 12 B), and each ring step is a gather + segment reduce
+  over real edges rather than dense T x T contractions over >95%
+  structural zeros.
 
 Zero-weight caveat (shared with every dense-tile backend): tiles are
 dense scatter-adds, so an explicit 0.0-weight edge is indistinguishable
@@ -44,7 +54,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.graphs.format import COOGraph
-from repro.graphs.partition import build_tile_store
+from repro.graphs.partition import (build_tile_store, merge_by_key,
+                                    pow2_bucket)
 
 
 def _ring_step_perm(p: int):
@@ -186,13 +197,25 @@ class RingStats:
     ring_steps: int = 0        # ppermute hops per aggregate (= P)
     tiles: int = 0             # non-empty tiles reduced across the mesh
     padded_tiles: int = 0      # tiles staged after S_max padding
-    block_bytes: int = 0       # device-resident tile bytes per shard
+    block_bytes: int = 0       # device-resident tile/entry bytes per shard
     ppermute_bytes: int = 0    # feature bytes rotated per aggregate
     x_shard_bytes: int = 0     # one resident feature shard
     acc_bytes: int = 0         # the resident destination accumulator
+    tile_format: str = "dense"
+    # real edge entries vs device-resident padded slots (dense: T^2 per
+    # staged tile; packed: the pow2 nnz bucket) — DESIGN.md C8
+    nnz: int = 0
+    padded_slots: int = 0
 
-    def as_dict(self) -> Dict[str, int]:
-        return dataclasses.asdict(self)
+    def fill_factor(self) -> float:
+        if not self.padded_slots:
+            return 1.0
+        return self.nnz / self.padded_slots
+
+    def as_dict(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        d["fill_factor"] = self.fill_factor()
+        return d
 
 
 @dataclasses.dataclass(frozen=True)
@@ -247,6 +270,9 @@ class RingTileShards:
             ppermute_bytes=4 * p * p * self.n_loc * feat_dim,
             x_shard_bytes=4 * self.n_loc * feat_dim,
             acc_bytes=4 * self.n_loc * h,
+            tile_format="dense",
+            nnz=int((self.blocks != 0.0).sum()),
+            padded_slots=p * p * self.s_max * self.tile * self.tile,
         )
 
 
@@ -266,22 +292,45 @@ def _ring_geometry(num_vertices: int, num_shards: int, tile: int):
 
 
 def ring_stripe_bytes(g: COOGraph, num_shards: int, tile: int = 256,
-                      in_dim: int = 0, out_dim: int = 0) -> int:
-    """Exact per-shard device bytes of the ring-tiled plan for `g` —
-    one O(E) binning pass, no tile densification.  Matches
-    `RingTileShards.device_bytes()` (+ `ring_feature_bytes` when dims
-    are given), so gates can price a batch before paying the build."""
+                      in_dim: int = 0, out_dim: int = 0,
+                      tile_format: str = "dense",
+                      bucket_floor: int = 8) -> int:
+    """Exact per-shard device bytes of the ring plan for `g` — one
+    O(E log E) binning pass, no tile densification.  Matches
+    `RingTileShards.device_bytes()` (dense) or
+    `PackedRingShards.device_bytes()` (packed), + `ring_feature_bytes`
+    when dims are given, so gates can price a batch before paying the
+    build; "auto" returns the cheaper of the two (the format
+    `prepare_ring` would pick)."""
     p = num_shards
     t, q_loc, n_loc = _ring_geometry(g.num_vertices, p, tile)
-    q = p * q_loc
-    key = (g.dst // t).astype(np.int64) * q + (g.src // t)
-    uniq = np.unique(key)
-    pair = (uniq // q) // q_loc * p + (uniq % q) // q_loc
-    counts = np.bincount(pair, minlength=p * p)
-    s_max = int(max(counts.max() if counts.size else 0, 1))
-    per_dev = p * s_max
-    return int(4 * per_dev * t * t + 8 * per_dev + 4 * n_loc
-               + ring_feature_bytes(n_loc, in_dim, out_dim))
+    feat = ring_feature_bytes(n_loc, in_dim, out_dim)
+
+    def dense_bytes() -> int:
+        q = p * q_loc
+        key = (g.dst // t).astype(np.int64) * q + (g.src // t)
+        uniq = np.unique(key)
+        pair = (uniq // q) // q_loc * p + (uniq % q) // q_loc
+        counts = np.bincount(pair, minlength=p * p)
+        s_max = int(max(counts.max() if counts.size else 0, 1))
+        per_dev = p * s_max
+        return int(4 * per_dev * t * t + 8 * per_dev + 4 * n_loc)
+
+    def packed_bytes() -> int:
+        n_loc_p = -(-g.num_vertices // p)
+        n_pad = p * n_loc_p
+        uniq = np.unique(g.dst.astype(np.int64) * n_pad + g.src)
+        pair = (uniq // n_pad) // n_loc_p * p + (uniq % n_pad) // n_loc_p
+        counts = np.bincount(pair, minlength=p * p)
+        l_max = pow2_bucket(int(counts.max()) if counts.size else 0,
+                            bucket_floor)
+        return int(12 * p * l_max + 4 * n_loc_p)
+
+    if tile_format == "dense":
+        return dense_bytes() + feat
+    if tile_format == "packed":
+        return packed_bytes() + feat
+    return min(dense_bytes(), packed_bytes()) + feat
 
 
 def build_ring_tile_shards(g: COOGraph, num_shards: int,
@@ -331,6 +380,186 @@ def build_ring_tile_shards(g: COOGraph, num_shards: int,
         nnzb=int(store.nnzb), num_vertices=n,
         blocks=blocks, tile_row=tile_row, tile_col=tile_col,
         in_counts=store.in_counts.reshape(p, n_loc).astype(np.float32))
+
+
+# ----------------------------------------------------------------------
+# Packed ring stripes (DESIGN.md C8): nnz-bucket padding, no dense tiles
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PackedRingShards:
+    """Host-built, device-sharded *packed* form of the ring stripes:
+    destination vertices split into P contiguous shards of `n_loc`
+    vertices; each (dst shard d, src shard s) pair carries its merged
+    edge entries directly — `rows[d, s, i]` / `cols[d, s, i]` are the
+    shard-local destination / source vertex of entry i, `vals` its
+    merged weight.  Pairs pad to the pow2 nnz bucket `l_max` with
+    (0, 0, 0.0) entries (a no-op for sum, masked out of max by the
+    val != 0 convention) — the nnz-bucket replacement for the dense
+    plan's `s_max` zero-tile padding."""
+    num_shards: int
+    n_loc: int                  # padded vertices per shard
+    l_max: int                  # pow2 padded entries per shard pair
+    nnz: int                    # merged edge entries (unpadded)
+    num_vertices: int
+    rows: np.ndarray            # (P, P, L) int32 local dst vertex
+    cols: np.ndarray            # (P, P, L) int32 local src vertex
+    vals: np.ndarray            # (P, P, L) float32 (0.0 = padding)
+    in_counts: np.ndarray       # (P, n_loc) float32 in-edge counts
+    tile: int = 0               # no tiles in this form (meta compat)
+    q_loc: int = 1
+    s_max: int = 0              # = l_max (meta compat with the dense plan)
+    nnzb: int = 0               # = nnz  (meta compat with the dense plan)
+
+    @property
+    def padded_vertices(self) -> int:
+        return self.num_shards * self.n_loc
+
+    def device_bytes(self) -> int:
+        """Device-resident bytes per shard: the packed stripe (12 B per
+        entry slot across the P source pairs) + the in-count shard."""
+        return int(12 * self.num_shards * self.l_max + 4 * self.n_loc)
+
+    def stats(self, feat_dim: int, out_dim: Optional[int] = None) -> RingStats:
+        p = self.num_shards
+        h = out_dim if out_dim is not None else feat_dim
+        return RingStats(
+            shards=p,
+            ring_steps=p,
+            tiles=self.nnz,
+            padded_tiles=p * p * self.l_max,
+            block_bytes=12 * p * self.l_max,
+            ppermute_bytes=4 * p * p * self.n_loc * feat_dim,
+            x_shard_bytes=4 * self.n_loc * feat_dim,
+            acc_bytes=4 * self.n_loc * h,
+            tile_format="packed",
+            nnz=self.nnz,
+            padded_slots=p * p * self.l_max,
+        )
+
+
+def _merge_edges(g: COOGraph, n_pad: int):
+    """Merge multi-edges by summation over the padded vertex space —
+    the same coefficients the dense tiles' scatter-add produces
+    (`graphs.partition.merge_by_key` is the shared merge core)."""
+    ku, val = merge_by_key(g.dst.astype(np.int64) * n_pad + g.src,
+                           g.weights())
+    return (ku // n_pad).astype(np.int64), (ku % n_pad).astype(np.int64), \
+        val
+
+
+def build_packed_ring_shards(g: COOGraph, num_shards: int,
+                             bucket_floor: int = 8) -> PackedRingShards:
+    """Partition a COO graph into per-(dst, src)-shard-pair packed edge
+    lists: one argsort to merge multi-edges, one binning pass to group
+    by shard pair — O(E log E) host work, no T^2 anywhere."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    p = num_shards
+    n = g.num_vertices
+    n_loc = -(-n // p)
+    n_pad = p * n_loc
+    dst, src, val = _merge_edges(g, n_pad)
+    d_of = dst // n_loc
+    s_of = src // n_loc
+    pair = d_of * p + s_of
+    order = np.argsort(pair, kind="stable")
+    pair_sorted = pair[order]
+    counts = np.bincount(pair_sorted, minlength=p * p)
+    l_max = pow2_bucket(int(counts.max()) if counts.size else 0,
+                        bucket_floor)
+    starts = np.searchsorted(pair_sorted, np.arange(p * p))
+    slot = np.arange(order.size) - starts[pair_sorted]
+
+    rows = np.zeros((p, p, l_max), np.int32)
+    cols = np.zeros((p, p, l_max), np.int32)
+    vals = np.zeros((p, p, l_max), np.float32)
+    if order.size:
+        di, si = d_of[order], s_of[order]
+        rows[di, si, slot] = (dst[order] % n_loc)
+        cols[di, si, slot] = (src[order] % n_loc)
+        vals[di, si, slot] = val[order]
+    in_counts = np.bincount(g.dst, minlength=n_pad).astype(np.float32)
+    return PackedRingShards(
+        num_shards=p, n_loc=n_loc, l_max=l_max, nnz=int(dst.size),
+        num_vertices=n, rows=rows, cols=cols, vals=vals,
+        in_counts=in_counts.reshape(p, n_loc),
+        s_max=l_max, nnzb=int(dst.size))
+
+
+def _ring_packed_shard(rows, cols, vals, x_shard, counts, *,
+                       axis_name: str, op: str, n_loc: int,
+                       num_shards: int):
+    """Per-device body (inside shard_map): gather + segment-reduce this
+    device's packed stripe against each rotating source shard.
+
+    rows/cols/vals: (P, L) — this shard's entries, by source shard.
+    x_shard:        (n_loc, F) — the resident feature shard (rotates).
+    counts:         (n_loc,) — in-edge counts (mean divides by them).
+    """
+    p = num_shards
+    me = jax.lax.axis_index(axis_name)
+    f = x_shard.shape[1]
+    base_op = "sum" if op == "mean" else op
+    if base_op == "sum":
+        init_acc = jnp.zeros((n_loc, f), jnp.float32)
+    else:
+        init_acc = jnp.full((n_loc, f), -jnp.inf, jnp.float32)
+    init_acc = _pvary(init_acc, axis_name)
+
+    def step(carry, k):
+        x_rot, acc = carry
+        s = jax.lax.rem(me + k, p)
+        r = jax.lax.dynamic_index_in_dim(rows, s, 0, keepdims=False)
+        c = jax.lax.dynamic_index_in_dim(cols, s, 0, keepdims=False)
+        v = jax.lax.dynamic_index_in_dim(vals, s, 0, keepdims=False)
+        # issue the hop before the gather/reduce: the collective-permute
+        # overlaps the edge work below (C2)
+        x_next = jax.lax.ppermute(x_rot, axis_name, _ring_step_perm(p))
+        gathered = jnp.take(x_rot, c, axis=0)              # (L, F)
+        if base_op == "sum":
+            acc = acc + jax.ops.segment_sum(v[:, None] * gathered, r,
+                                            num_segments=n_loc)
+        else:
+            scaled = jnp.where((v != 0.0)[:, None],
+                               v[:, None] * gathered, -jnp.inf)
+            acc = jnp.maximum(
+                acc, jax.ops.segment_max(scaled, r, num_segments=n_loc))
+        return (x_next, acc), None
+
+    (_, acc), _ = jax.lax.scan(step, (x_shard, init_acc),
+                               jnp.arange(p, dtype=jnp.int32))
+    y = acc
+    if base_op == "max":
+        y = jnp.where(jnp.isneginf(y), 0.0, y)
+    if op == "mean":
+        y = y / jnp.maximum(counts, 1.0)[:, None]
+    return y
+
+
+def make_ring_packed_aggregate(mesh: Mesh, axis: str, op: str,
+                               n_loc: int) -> Callable:
+    """shard_map wrapper over `_ring_packed_shard`:
+
+        (rows, cols, vals, X_padded, in_counts) -> A(X)
+
+    with rows/cols/vals (P, P, L), X_padded (P * n_loc, F) row-sharded
+    over `axis`, in_counts (P, n_loc)."""
+    if op not in ("sum", "max", "mean"):
+        raise ValueError(op)
+    p = int(mesh.shape[axis])
+    body = partial(_ring_packed_shard, axis_name=axis, op=op,
+                   n_loc=n_loc, num_shards=p)
+
+    def inner(rows, cols, vals, x, counts):
+        # leading P dim arrives size-1 per device; squeeze it
+        return body(rows[0], cols[0], vals[0], x, counts[0])
+
+    return shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None, None),
+                  P(axis, None, None), P(axis, None), P(axis, None)),
+        out_specs=P(axis, None))
 
 
 def _ring_tiled_shard(blocks, tile_row, tile_col, x_shard, counts, *,

@@ -73,6 +73,12 @@ class EnGNConfig:
     # "tiled"    out-of-core streamed executor (core/tiled.py, C7)
     backend: str = "segment"
     tile: int = 256                   # T for the blocked/tiled/ring backends
+    # How the tile-carrying backends (blocked / tiled / ring) carry
+    # their tiles (DESIGN.md C8): "dense" T x T blocks (the bit-for-bit
+    # oracle), "packed" pow2-nnz-bucketed (row, col, val) entries, or
+    # "auto" — ask kernels/autotune.py per (graph, backend).
+    tile_format: str = "auto"
+    packed_bucket_floor: int = 8      # smallest packed nnz bucket
     ring_shards: Optional[int] = None  # ring: devices in the ring (default all)
     ring_axis: str = "ring"            # ring: mesh axis name
     # device-memory budget for the dense paths; prepare_graph spills to
@@ -210,10 +216,39 @@ class EnGNLayer:
                 ev = ev * graph["val"][:, None]
             return segment_aggregate(ev, graph["dst"], graph["n"], cfg.aggregate_op)
         if backend in ("blocked", "fused"):
-            from repro.kernels.rer_spmm import ops as spmm_ops
             n = graph["n"]
             pad_n = graph["blocks_meta"]["padded"]
             xf = jnp.zeros((pad_n, feat.shape[1]), feat.dtype).at[:n].set(feat)
+            if "packed_flat" in graph:
+                # off-TPU: one flat gather+segment launch beats a
+                # per-bucket-group loop (each launch pays dispatch)
+                from repro.kernels.rer_gather import ops as gather_ops
+                gsrc, gdst, gval = graph["packed_flat"]
+                y = gather_ops.packed_flat_xla(
+                    gsrc, gdst, gval, xf, n=xf.shape[0],
+                    op=cfg.aggregate_op)
+                return y[:n]
+            if "packed_groups" in graph:
+                from repro.kernels.rer_gather import ops as gather_ops
+                q = graph["blocks_meta"]["q"]
+                y = None
+                # TPU: one Mosaic launch per pow2 nnz-bucket group; raw
+                # partials merge by + / maximum, -inf finished once
+                for gr in graph["packed_groups"]:
+                    part = gather_ops.packed_spmm(
+                        gr["rows"], gr["cols"], gr["vals"],
+                        gr["block_row"], gr["block_col"], xf, q=q,
+                        op=cfg.aggregate_op, finish=False)
+                    if y is None:
+                        y = part
+                    elif cfg.aggregate_op == "sum":
+                        y = y + part
+                    else:
+                        y = jnp.maximum(y, part)
+                if cfg.aggregate_op == "max":
+                    y = jnp.where(jnp.isneginf(y), 0.0, y)
+                return y[:n]
+            from repro.kernels.rer_spmm import ops as spmm_ops
             y = spmm_ops.blocked_spmm(graph["blocks"], graph["block_row"],
                                       graph["block_col"], xf,
                                       q=graph["blocks_meta"]["q"],
@@ -231,9 +266,7 @@ class EnGNLayer:
             pad_n = graph["ring_meta"]["padded"]
             xf = jnp.zeros((pad_n, feat.shape[1]),
                            jnp.float32).at[:n].set(feat)
-            y = graph["ring_fn"](graph["ring_blocks"],
-                                 graph["ring_tile_row"],
-                                 graph["ring_tile_col"], xf,
+            y = graph["ring_fn"](*graph["ring_operands"], xf,
                                  graph["ring_counts"])
             return y[:n]
         raise ValueError(backend)
@@ -248,27 +281,41 @@ def prepare_tiled(g: COOGraph, cfg: EnGNConfig,
     h = out_dim if out_dim is not None else cfg.out_dim
     ex = TiledExecutor(g, tile=cfg.tile, chunk=cfg.tiled_chunk,
                        budget_bytes=cfg.device_budget_bytes, impl=impl,
-                       dim_hint=max(cfg.in_dim, h))
+                       dim_hint=max(cfg.in_dim, h),
+                       tile_format=cfg.tile_format,
+                       bucket_floor=cfg.packed_bucket_floor)
     return {"n": g.num_vertices, "backend": "tiled", "tiled_exec": ex,
             "tiled_meta": {"q": ex.store.q, "tile": ex.store.tile,
                            "chunk": ex.chunk,
                            "order": tile_schedule_order(cfg.in_dim, h),
-                           "host_bytes": ex.store.nbytes()}}
+                           "host_bytes": ex.store.nbytes(),
+                           "tile_format": ex.tile_format,
+                           "format_choice": ex.format_choice}}
 
 
 def prepare_ring(g: COOGraph, cfg: EnGNConfig,
                  out_dim: Optional[int] = None, plan=None, mesh=None):
-    """Build the graph dict for the sharded ring-tiled backend (C2):
-    destination vertices (and their stripe of edge tiles) are
-    partitioned across a ring mesh; each device keeps its sparse tile
-    stripe and accumulator resident while source-feature shards rotate
-    with ppermute.  `device_budget_bytes` is per shard and is checked
-    against the *actually built* plan (the a-priori closed form in
-    `dense_footprint_bytes` is a dense-stripe upper bound): over-budget
-    plans spill to the streamed tiled executor or raise."""
-    from repro.core.dataflow import (build_ring_tile_shards,
+    """Build the graph dict for the sharded ring backend (C2):
+    destination vertices (and their stripe of edges) are partitioned
+    across a ring mesh; each device keeps its stripe and accumulator
+    resident while source-feature shards rotate with ppermute.
+
+    `cfg.tile_format` picks the stripe carrier (C8): dense T x T tiles,
+    packed (row, col, val) entries at pow2 nnz buckets, or "auto" —
+    whichever stages fewer bytes (priced by `ring_stripe_bytes` before
+    any build).  A prebuilt `plan` (either class) pins the format.
+
+    `device_budget_bytes` is per shard and is checked against the
+    *actually built* plan (the a-priori closed form in
+    `dense_footprint_bytes` is an upper bound): over-budget plans spill
+    to the streamed tiled executor or raise."""
+    from repro.core.dataflow import (PackedRingShards,
+                                     build_packed_ring_shards,
+                                     build_ring_tile_shards,
+                                     make_ring_packed_aggregate,
                                      make_ring_tiled_aggregate,
-                                     ring_feature_bytes)
+                                     ring_feature_bytes,
+                                     ring_stripe_bytes)
     from repro.distributed.sharding import ring_mesh
     from jax.sharding import NamedSharding, PartitionSpec as P
     h = out_dim if out_dim is not None else cfg.out_dim
@@ -276,7 +323,20 @@ def prepare_ring(g: COOGraph, cfg: EnGNConfig,
         mesh = ring_mesh(cfg.ring_shards, cfg.ring_axis)
     p = int(mesh.devices.size)
     if plan is None:
-        plan = build_ring_tile_shards(g, p, tile=cfg.tile)
+        fmt = cfg.tile_format
+        if fmt == "auto":
+            dense_b = ring_stripe_bytes(g, p, tile=cfg.tile,
+                                        tile_format="dense")
+            packed_b = ring_stripe_bytes(
+                g, p, tile=cfg.tile, tile_format="packed",
+                bucket_floor=cfg.packed_bucket_floor)
+            fmt = "packed" if packed_b < dense_b else "dense"
+        if fmt == "packed":
+            plan = build_packed_ring_shards(
+                g, p, bucket_floor=cfg.packed_bucket_floor)
+        else:
+            plan = build_ring_tile_shards(g, p, tile=cfg.tile)
+    packed = isinstance(plan, PackedRingShards)
     need = plan.device_bytes() + ring_feature_bytes(plan.n_loc,
                                                     cfg.in_dim, h)
     if cfg.device_budget_bytes and need > cfg.device_budget_bytes:
@@ -288,19 +348,29 @@ def prepare_ring(g: COOGraph, cfg: EnGNConfig,
                 f"auto_spill=True streams tiles out-of-core instead)")
         return prepare_tiled(g, cfg, out_dim)
     spec = NamedSharding(mesh, P(cfg.ring_axis))
+    if packed:
+        operands = tuple(jax.device_put(a, spec)
+                         for a in (plan.rows, plan.cols, plan.vals))
+        ring_fn = make_ring_packed_aggregate(mesh, cfg.ring_axis,
+                                             cfg.aggregate_op,
+                                             plan.n_loc)
+    else:
+        operands = tuple(jax.device_put(a, spec)
+                         for a in (plan.blocks, plan.tile_row,
+                                   plan.tile_col))
+        ring_fn = make_ring_tiled_aggregate(mesh, cfg.ring_axis,
+                                            cfg.aggregate_op,
+                                            plan.q_loc, plan.tile)
     d: Dict[str, Any] = {
         "n": g.num_vertices, "backend": "ring",
-        "ring_blocks": jax.device_put(plan.blocks, spec),
-        "ring_tile_row": jax.device_put(plan.tile_row, spec),
-        "ring_tile_col": jax.device_put(plan.tile_col, spec),
+        "ring_operands": operands,
         "ring_counts": jax.device_put(plan.in_counts, spec),
-        "ring_fn": make_ring_tiled_aggregate(mesh, cfg.ring_axis,
-                                             cfg.aggregate_op,
-                                             plan.q_loc, plan.tile),
+        "ring_fn": ring_fn,
         "ring_meta": {"shards": p, "padded": plan.padded_vertices,
                       "mesh": mesh, "tile": plan.tile,
                       "q_loc": plan.q_loc, "s_max": plan.s_max,
                       "nnzb": plan.nnzb, "device_bytes": need,
+                      "tile_format": "packed" if packed else "dense",
                       "stats": plan.stats(cfg.in_dim, h)},
     }
     return d
@@ -318,7 +388,8 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
         need = dense_footprint_bytes(g.num_vertices, g.num_edges,
                                      cfg.in_dim, h, backend,
                                      tile=cfg.tile,
-                                     has_val=g.val is not None)
+                                     has_val=g.val is not None,
+                                     tile_format=cfg.tile_format)
         if need > cfg.device_budget_bytes:
             if not cfg.auto_spill:
                 raise DeviceBudgetExceeded(
@@ -337,12 +408,70 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
             d["val"] = jnp.asarray(g.val)
         return d
     if backend in ("blocked", "fused"):
-        from repro.kernels.rer_spmm.ops import prepare_blocks
         # The adaptive order (Table 3) is recorded for the I/O analysis;
         # on TPU the kernel itself mandates the dst-stationary layout
         # (output tiles must be revisited consecutively), so the blocks
         # are always dst-sorted before upload — see rer_spmm docstring.
         order = tile_schedule_order(cfg.in_dim, h)
+        # Tile format (C8): the fused kernel mandates dense tiles, and
+        # mean never reaches blocked_spmm (it is a sum + divide at the
+        # segment level only) — both pin dense, as does an explicit
+        # tile_format="dense" (no store build at all in that case);
+        # otherwise the autotuner prices packed entries vs dense blocks.
+        choice = None
+        if (backend == "blocked" and cfg.aggregate_op in ("sum", "max")
+                and cfg.tile_format != "dense"):
+            from repro.graphs.partition import (build_tile_store,
+                                                pack_tile_store)
+            from repro.kernels.autotune import choose_tile_format
+            store = build_tile_store(g, cfg.tile)
+            packed = pack_tile_store(store)
+            choice = choose_tile_format(
+                cfg.tile_format, packed, backend="blocked",
+                bucket_floor=cfg.packed_bucket_floor)
+            if choice.fmt == "packed":
+                from repro.kernels.rer_gather import ops as gather_ops
+                # upload only the representation _aggregate will use:
+                # pow2-bucket groups feed the Mosaic kernel on TPU, the
+                # flat entry arrays feed the one-launch XLA path
+                if gather_ops.default_impl() == "xla":
+                    flat = gather_ops.flat_entries(packed)
+                    d["packed_flat"] = tuple(jnp.asarray(a)
+                                             for a in flat)
+                    tile_bytes = sum(a.nbytes for a in flat)
+                else:
+                    groups = gather_ops.prepare_packed_groups(
+                        packed, cfg.packed_bucket_floor)
+                    d["packed_groups"] = [
+                        {"rows": jnp.asarray(gr.rows),
+                         "cols": jnp.asarray(gr.cols),
+                         "vals": jnp.asarray(gr.vals),
+                         "block_row": jnp.asarray(gr.block_row),
+                         "block_col": jnp.asarray(gr.block_col)}
+                        for gr in groups]
+                    tile_bytes = sum(gr.nbytes() for gr in groups)
+                # re-check the *actually built* plan against the budget
+                # (the closed-form gate above prices nnz bounds, not the
+                # per-group interval padding) — mirror prepare_ring
+                need = tile_bytes + 4 * g.num_vertices * (cfg.in_dim + h)
+                if (cfg.device_budget_bytes
+                        and need > cfg.device_budget_bytes):
+                    d.pop("packed_flat", None)
+                    d.pop("packed_groups", None)
+                    if not cfg.auto_spill:
+                        raise DeviceBudgetExceeded(
+                            f"packed blocked plan needs ~{need} device "
+                            f"bytes, budget is "
+                            f"{cfg.device_budget_bytes} (auto_spill="
+                            f"True streams tiles out-of-core instead)")
+                    return prepare_tiled(g, cfg, out_dim)
+                d["blocks_meta"] = {
+                    "q": store.q, "padded": store.padded_vertices,
+                    "order": order, "tile": store.tile,
+                    "tile_format": "packed", "format_choice": choice,
+                    "device_bytes": tile_bytes}
+                return d
+        from repro.kernels.rer_spmm.ops import prepare_blocks
         b = coo_to_blocked(g, cfg.tile, order="column")
         blocks, brow, bcol = prepare_blocks(b.blocks, b.block_row,
                                             b.block_col, b.q)
@@ -350,7 +479,9 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
         d["block_row"] = jnp.asarray(brow)
         d["block_col"] = jnp.asarray(bcol)
         d["blocks_meta"] = {"q": b.q, "padded": b.padded_vertices,
-                            "order": order, "tile": b.tile}
+                            "order": order, "tile": b.tile,
+                            "tile_format": "dense",
+                            "format_choice": choice}
         return d
     if backend == "ring":
         return prepare_ring(g, cfg, out_dim)

@@ -21,6 +21,15 @@ hardware the tile DMA overlaps the MXU work (NeuraChip's decoupled
 fetch/compute, PAPERS.md).  `double_buffer=False` serialises the two for
 an overlap ablation (benchmarks/bench_tiled_exec.py).
 
+Tile format (DESIGN.md C8): with `tile_format="packed"` (or "auto", the
+default, when the autotuner picks it) the executor streams *packed*
+tiles — per-tile (row_local, col_local, val) entries padded to a pow2
+nnz bucket — instead of densifying each tile to T x T.  Host->device
+traffic and per-chunk MACs both drop by the tile fill factor (>95% of a
+power-law graph's dense tile slots are structural zeros);
+`TiledStats.fill_factor` reports how much padding remains.  The dense
+path is kept bit-for-bit intact as the oracle (`tile_format="dense"`).
+
 Duplicate-edge caveat (shared with the blocked backends): tiles are
 built with add-at, so multi-edges merge by summation before a max
 aggregation sees them; dedup edges first if exact multi-edge max
@@ -38,8 +47,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.format import COOGraph
-from repro.graphs.partition import (EdgeTileStore, build_tile_store,
-                                    chunk_tile_row, tile_schedule_order)
+from repro.graphs.partition import (EdgeTileStore, PackedTileStore,
+                                    build_tile_store, chunk_tile_row,
+                                    pack_tile_store, tile_schedule_order)
 
 
 class DeviceBudgetExceeded(RuntimeError):
@@ -53,15 +63,23 @@ class DeviceBudgetExceeded(RuntimeError):
 def dense_footprint_bytes(num_vertices: int, num_edges: int, in_dim: int,
                           out_dim: int, backend: str = "segment",
                           tile: int = 256, has_val: bool = True,
-                          num_shards: int = 1) -> int:
-    """Device bytes a *dense* (graph-resident) backend needs — the gate
-    that decides when to spill to the streamed tiled executor.
+                          num_shards: int = 1,
+                          tile_format: str = "dense") -> int:
+    """Device bytes a graph-resident backend needs — the gate that
+    decides when to spill to the streamed tiled executor.
+
+    `tile_format` prices the tile-carrying backends in the bytes they
+    actually stage: "dense" is the historical 4 T^2 per tile, "packed"
+    prices pow2-bucketed (row, col, val) entries (12 B each, bucket
+    padding bounded by 2x + the bucket floor per tile — DESIGN.md C8),
+    and "auto" takes the cheaper of the two (what the autotuner would
+    pick on byte cost).
 
     For the ring-tiled backend the estimate is *per shard* of a
     `num_shards`-device ring (the budget is per device): one feature
     shard plus its ppermute double buffer and accumulator, and an upper
-    bound on the device-resident tile stripe (`prepare_graph` refines
-    the tile term with the actually-built plan before deciding to
+    bound on the device-resident stripe (`prepare_ring` refines the
+    stripe term with the actually-built plan before deciding to
     spill — this closed form is for sizing without a build)."""
     n, e, f, h = num_vertices, num_edges, in_dim, out_dim
     feat = 4 * n * (f + h)                    # resident X and H
@@ -71,7 +89,12 @@ def dense_footprint_bytes(num_vertices: int, num_edges: int, in_dim: int,
     if backend in ("blocked", "fused"):
         q = -(-n // tile)
         nnzb_ub = min(q * q, max(e, 1))
-        return feat + 4 * nnzb_ub * tile * tile
+        dense = feat + 4 * nnzb_ub * tile * tile
+        # merged entries <= E; pow2 bucket padding < 2x nnz + floor/tile
+        packed = feat + 12 * (2 * e + 8 * nnzb_ub) + 8 * nnzb_ub
+        if tile_format == "dense" or backend == "fused":
+            return dense              # the fused kernel eats dense tiles
+        return packed if tile_format == "packed" else min(dense, packed)
     if backend == "ring":
         p = max(num_shards, 1)
         n_loc_raw = -(-n // p)
@@ -82,8 +105,12 @@ def dense_footprint_bytes(num_vertices: int, num_edges: int, in_dim: int,
         # stripe upper bound: min(dense stripe, every edge in its own
         # tile, padding replicating the worst (dst, src) pair P times)
         per_dev_tiles = min(q_loc * q, p * max(e, 1))
-        return (4 * n_loc * (2 * f + h)
-                + 4 * per_dev_tiles * t * t + 8 * per_dev_tiles)
+        feat_ring = 4 * n_loc * (2 * f + h)
+        dense = feat_ring + 4 * per_dev_tiles * t * t + 8 * per_dev_tiles
+        packed = feat_ring + 12 * (2 * e + 8 * p) + 4 * n_loc
+        if tile_format == "dense":
+            return dense
+        return packed if tile_format == "packed" else min(dense, packed)
     raise ValueError(backend)
 
 
@@ -137,6 +164,17 @@ def _finish_max(acc):
     return jnp.where(jnp.isneginf(acc), 0.0, acc)
 
 
+@jax.jit
+def _acc_add(acc, part):
+    return acc + part
+
+
+@jax.jit
+def _acc_max(acc, part):
+    # packed max partials keep -inf for uncovered rows: a no-op merge
+    return jnp.maximum(acc, part)
+
+
 @partial(jax.jit, static_argnames=("op", "impl", "q"))
 def _chunk_step_kernel(acc, blocks, xs, *, op, impl, q):
     """Same chunk reduction expressed through the RER-SpMM kernel
@@ -168,9 +206,25 @@ class TiledStats:
     d2h_bytes: int = 0
     x_loads: int = 0
     x_reuse_hits: int = 0
+    # staged-payload accounting (both formats): real edge entries vs
+    # the padded slots actually uploaded — dense slots are T^2 per
+    # tile, packed slots are the pow2 nnz bucket (DESIGN.md C8)
+    staged_nnz: int = 0
+    staged_slots: int = 0
+    packed_tile_bytes: int = 0        # h2d tile bytes when packed
+    dense_tile_bytes: int = 0         # h2d tile bytes when dense
 
-    def as_dict(self) -> Dict[str, int]:
-        return dataclasses.asdict(self)
+    def fill_factor(self) -> float:
+        """Real entries / padded slots staged so far (1.0 = no padding
+        moved) — how much of the upload was useful work."""
+        if not self.staged_slots:
+            return 1.0
+        return self.staged_nnz / self.staged_slots
+
+    def as_dict(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        d["fill_factor"] = self.fill_factor()
+        return d
 
 
 class TiledExecutor:
@@ -180,18 +234,36 @@ class TiledExecutor:
                   shared across layers / calls).
     tile, chunk:  interval size T and tiles per device step; both are
                   shrunk by `fit_tile_plan` when `budget_bytes` is set.
-    budget_bytes: device-memory budget the streaming step must respect.
+    budget_bytes: device-memory budget the streaming step must respect
+                  (priced at the dense staging shapes for both formats —
+                  a conservative bound for packed streaming).
     impl:         None -> fused einsum step; "xla"/"pallas" -> route each
-                  chunk through the rer_spmm kernel dispatcher.
+                  chunk through the rer_spmm / rer_gather dispatchers.
+    tile_format:  "dense" | "packed" | "auto" (DESIGN.md C8).  "auto"
+                  asks `kernels.autotune.choose_tile_format`; pass
+                  `autotune_measure=True` to decide by timed sample
+                  chunks instead of the byte cost model.
     """
 
     def __init__(self, graph: COOGraph, tile: int = 256, chunk: int = 8,
                  budget_bytes: Optional[int] = None,
                  impl: Optional[str] = None, double_buffer: bool = True,
-                 x_cache: int = 2, dim_hint: Optional[int] = None):
+                 x_cache: int = 2, dim_hint: Optional[int] = None,
+                 tile_format: str = "auto", bucket_floor: int = 8,
+                 autotune_measure: bool = False):
+        from repro.kernels.autotune import choose_tile_format
         dim = dim_hint if dim_hint is not None else 128
         tile, chunk = fit_tile_plan(budget_bytes, dim, tile, chunk, x_cache)
         self.store: EdgeTileStore = build_tile_store(graph, tile)
+        self.packed: Optional[PackedTileStore] = None
+        if tile_format != "dense":
+            self.packed = pack_tile_store(self.store)
+        self.format_choice = choose_tile_format(
+            tile_format, self.packed, backend="tiled",
+            bucket_floor=bucket_floor, measure=autotune_measure,
+            store=self.store, dim=dim)
+        self.tile_format = self.format_choice.fmt
+        self.bucket_floor = self.format_choice.bucket_floor
         self.chunk = chunk
         self.budget_bytes = budget_bytes
         self.impl = impl
@@ -305,34 +377,60 @@ class TiledExecutor:
         return dev
 
     def _stage_chunk(self, idx: np.ndarray, x: np.ndarray, ext, chunk: int):
-        """Host->device for one chunk of tiles: the (C, T, T) tile stack
-        (padded to the fixed chunk width so one program is compiled) and
-        the (C, T, d) stack of their source intervals."""
+        """Host->device for one chunk of tiles: the tile payload —
+        dense (C, T, T) stack, or packed (C, S) entry arrays at the
+        chunk's pow2 nnz bucket — plus the (C, T, d) stack of their
+        source intervals (chunk width fixed so one program compiles)."""
         st = self.store
         t = st.tile
         k = idx.size
         assert k > 0, "chunks are built from non-empty tile lists"
-        # fresh buffer per stage: device_put may be zero-copy on CPU, so
-        # the staged chunk must not be overwritten while in flight
-        blocks = np.zeros((chunk, t, t), np.float32)
-        st.densify(idx, blocks)
-        self.stats.h2d_tile_bytes += blocks.nbytes
+        nnz = int((st.edge_ptr[idx + 1] - st.edge_ptr[idx]).sum())
+        if self.tile_format == "packed":
+            ps = self.packed
+            bucket = ps.bucket_of(idx, self.bucket_floor)
+            rows, cols, vals = ps.pack(idx, chunk, bucket)
+            tb = rows.nbytes + cols.nbytes + vals.nbytes
+            self.stats.packed_tile_bytes += tb
+            self.stats.staged_nnz += int(
+                (ps.entry_ptr[idx + 1] - ps.entry_ptr[idx]).sum())
+            self.stats.staged_slots += chunk * bucket
+            payload = (jax.device_put(rows), jax.device_put(cols),
+                       jax.device_put(vals))
+        else:
+            # fresh buffer per stage: device_put may be zero-copy on
+            # CPU, so the staged chunk must not be overwritten while in
+            # flight
+            blocks = np.zeros((chunk, t, t), np.float32)
+            st.densify(idx, blocks)
+            tb = blocks.nbytes
+            self.stats.dense_tile_bytes += tb
+            self.stats.staged_nnz += nnz
+            self.stats.staged_slots += chunk * t * t
+            payload = jax.device_put(blocks)
+        self.stats.h2d_tile_bytes += tb
         self.stats.tiles += k
-        blocks_dev = jax.device_put(blocks)
         xs = [self._src_interval(x, int(j), ext) for j in st.block_col[idx]]
         # pad with a repeat of the first interval: its tiles are zero, so
         # it contributes nothing, and the chunk shape stays compile-stable
         xs.extend(xs[0] for _ in range(chunk - k))
         xs_dev = jnp.stack(xs)
-        return blocks_dev, xs_dev
+        return payload, xs_dev
 
-    def _chunk_step(self, acc, blocks_dev, xs_dev, op: str, chunk: int):
+    def _chunk_step(self, acc, payload, xs_dev, op: str, chunk: int):
+        if self.tile_format == "packed":
+            from repro.kernels.rer_gather import ops as gather_ops
+            rows, cols, vals = payload
+            part = gather_ops.packed_tile_part(rows, cols, vals, xs_dev,
+                                               op=op, impl=self.impl)
+            return (_acc_add(acc, part) if op == "sum"
+                    else _acc_max(acc, part))
         if self.impl in ("xla", "pallas"):
-            return _chunk_step_kernel(acc, blocks_dev, xs_dev, op=op,
+            return _chunk_step_kernel(acc, payload, xs_dev, op=op,
                                       impl=self.impl, q=chunk)
         if op == "sum":
-            return _chunk_step_sum(acc, blocks_dev, xs_dev)
-        return _chunk_step_max(acc, blocks_dev, xs_dev)
+            return _chunk_step_sum(acc, payload, xs_dev)
+        return _chunk_step_max(acc, payload, xs_dev)
 
     def _sweep_column(self, x, op, ext, d) -> np.ndarray:
         """dst-stationary: accumulator resident per destination interval,
@@ -364,7 +462,7 @@ class TiledExecutor:
         acc = None
         cur_row: Optional[int] = None
         for s, (i, idx) in enumerate(steps):
-            blocks_dev, xs_dev = staged
+            payload, xs_dev = staged
             if i != cur_row:
                 if cur_row is not None:
                     flush(cur_row, acc)
@@ -374,7 +472,7 @@ class TiledExecutor:
                 # issue the next H2D before dispatching compute: the
                 # transfer overlaps the reduction below (C7)
                 staged = self._stage_chunk(steps[s + 1][1], x, ext, chunk)
-            acc = self._chunk_step(acc, blocks_dev, xs_dev, op, chunk)
+            acc = self._chunk_step(acc, payload, xs_dev, op, chunk)
             self.stats.steps += 1
             if not self.double_buffer and s + 1 < len(steps):
                 jax.block_until_ready(acc)
@@ -401,11 +499,29 @@ class TiledExecutor:
 
         def stage(step):
             j, k = step
-            blk_host = st.densify([k], np.zeros((1, t, t), np.float32))[0]
-            self.stats.h2d_tile_bytes += blk_host.nbytes
             self.stats.tiles += 1
-            return (jax.device_put(blk_host),
-                    self._src_interval(x, j, ext))
+            if self.tile_format == "packed":
+                ps = self.packed
+                bucket = ps.bucket_of([k], self.bucket_floor)
+                rows, cols, vals = ps.pack([k], 1, bucket)
+                tb = rows.nbytes + cols.nbytes + vals.nbytes
+                self.stats.packed_tile_bytes += tb
+                self.stats.staged_nnz += int(ps.entry_ptr[k + 1]
+                                             - ps.entry_ptr[k])
+                self.stats.staged_slots += bucket
+                payload = (jax.device_put(rows), jax.device_put(cols),
+                           jax.device_put(vals))
+            else:
+                blk_host = st.densify([k],
+                                      np.zeros((1, t, t), np.float32))[0]
+                tb = blk_host.nbytes
+                self.stats.dense_tile_bytes += tb
+                self.stats.staged_nnz += int(st.edge_ptr[k + 1]
+                                             - st.edge_ptr[k])
+                self.stats.staged_slots += t * t
+                payload = jax.device_put(blk_host)
+            self.stats.h2d_tile_bytes += tb
+            return (payload, self._src_interval(x, j, ext))
 
         staged = stage(steps[0])
         for s, (j, k) in enumerate(steps):
@@ -429,6 +545,12 @@ class TiledExecutor:
         return out[:st.num_vertices]
 
     def _tile_part(self, blk_dev, x_dev, op: str):
+        if self.tile_format == "packed":
+            from repro.kernels.rer_gather import ops as gather_ops
+            rows, cols, vals = blk_dev
+            return gather_ops.packed_tile_part(rows, cols, vals,
+                                               x_dev[None], op=op,
+                                               impl=self.impl)
         if self.impl in ("xla", "pallas"):
             # single-tile chunk through the rer_spmm dispatcher; the
             # -inf/zero init makes the result exactly the raw partial

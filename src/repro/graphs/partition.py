@@ -159,6 +159,165 @@ class EdgeTileStore:
         return out
 
 
+def pow2_bucket(n: int, floor: int = 8) -> int:
+    """Smallest power of two >= max(n, floor) — the nnz bucket a packed
+    tile is padded to, so jitted consumers see a log-bounded shape set."""
+    n = max(int(n), int(floor), 1)
+    return 1 << (n - 1).bit_length()
+
+
+# ----------------------------------------------------------------------
+# Packed (CSR-within-tile) edge tiles (DESIGN.md C8)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PackedTileStore:
+    """The same Q x Q edge-tile grid as `EdgeTileStore`, but carried as
+    packed per-tile edge lists instead of dense T x T blocks: per tile,
+    `(row_local, col_local, val)` entries with multi-edges merged by
+    summation (what densify's scatter-add produces, so the packed and
+    dense forms of a tile carry the same coefficients — including the
+    max convention that a merged weight of 0.0 means "no edge"; the
+    merge accumulates in float64, so duplicate float weights can differ
+    from the float32 scatter-add by an ulp — deduped or integer-weighted
+    graphs are exact).  Entries are sorted (row_local, col_local) within
+    each tile (CSR-within-tile).
+
+    On real power-law graphs most tile slots are structural zeros
+    (`fill_factor()` is typically well under 1%), so staging packed
+    entries instead of dense blocks cuts both the bytes moved and the
+    MACs issued by ~1/fill (DESIGN.md C8; VersaGNN / NeuraChip in
+    PAPERS.md make the same argument in hardware).  Consumers pad each
+    staged group of tiles to a pow2 nnz bucket (`pow2_bucket`) so jit
+    caches stay warm; padding entries are (0, 0, 0.0) — a no-op for sum
+    and masked out of max by the val != 0 convention.
+    """
+    num_vertices: int
+    tile: int
+    q: int
+    block_row: np.ndarray           # (nnzb,) int32 dst interval
+    block_col: np.ndarray           # (nnzb,) int32 src interval
+    entry_ptr: np.ndarray           # (nnzb+1,) int64 — merged entries/tile
+    row_local: np.ndarray           # (M,) int32 dst offset within tile
+    col_local: np.ndarray           # (M,) int32 src offset within tile
+    val: np.ndarray                 # (M,) float32 merged edge weight
+    in_counts: np.ndarray           # (N,) float32 in-edge counts
+
+    @property
+    def nnzb(self) -> int:
+        return int(self.block_row.shape[0])
+
+    @property
+    def nnz(self) -> int:
+        """Merged (unique-coordinate) edge entries across all tiles."""
+        return int(self.row_local.shape[0])
+
+    @property
+    def padded_vertices(self) -> int:
+        return self.q * self.tile
+
+    def tile_nnz(self) -> np.ndarray:
+        return np.diff(self.entry_ptr)
+
+    def bucket_of(self, tiles, floor: int = 8) -> int:
+        """The pow2 nnz bucket a staged group of tiles pads to."""
+        tiles = np.asarray(tiles, np.int64)
+        if tiles.size == 0:
+            return pow2_bucket(0, floor)
+        nnz = (self.entry_ptr[tiles + 1] - self.entry_ptr[tiles])
+        return pow2_bucket(int(nnz.max()), floor)
+
+    def packed_slots(self, floor: int = 8) -> int:
+        """Total padded entry slots if every tile is staged at its own
+        pow2 bucket — the denominator of `fill_factor`."""
+        nnz = self.tile_nnz()
+        if nnz.size == 0:
+            return 0
+        buckets = np.maximum(np.maximum(nnz, floor), 1)
+        exp = np.ceil(np.log2(buckets)).astype(np.int64)
+        return int((1 << exp).sum())
+
+    def fill_factor(self, floor: int = 8) -> float:
+        """Real entries / padded slots — how much of what we stage is
+        useful work (1.0 = no padding).  Compare with the dense form's
+        nnz / (nnzb * T^2)."""
+        slots = self.packed_slots(floor)
+        return float(self.nnz) / slots if slots else 1.0
+
+    def dense_fill(self) -> float:
+        """nnz / dense tile slots — what the dense T x T form wastes."""
+        if self.nnzb == 0:
+            return 1.0
+        return float(self.nnz) / (self.nnzb * self.tile * self.tile)
+
+    def nbytes(self) -> int:
+        return int(self.row_local.nbytes + self.col_local.nbytes
+                   + self.val.nbytes + self.entry_ptr.nbytes
+                   + self.block_row.nbytes + self.block_col.nbytes)
+
+    def pack(self, tiles, width: int, bucket: int
+             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Stage the given tiles as `(rows, cols, vals)` arrays of shape
+        `(width, bucket)` (width >= len(tiles); trailing tiles and entry
+        slots are zero padding).  A tile id of -1 stays all-padding —
+        the empty tiles `prepare_packed_groups` adds for missing dst
+        intervals."""
+        tiles = np.asarray(tiles, np.int64)
+        rows = np.zeros((width, bucket), np.int32)
+        cols = np.zeros((width, bucket), np.int32)
+        vals = np.zeros((width, bucket), np.float32)
+        for c, k in enumerate(tiles):
+            if k < 0:
+                continue
+            lo, hi = int(self.entry_ptr[k]), int(self.entry_ptr[k + 1])
+            m = hi - lo
+            rows[c, :m] = self.row_local[lo:hi]
+            cols[c, :m] = self.col_local[lo:hi]
+            vals[c, :m] = self.val[lo:hi]
+        return rows, cols, vals
+
+
+def merge_by_key(key: np.ndarray, w: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge duplicate keys by summing their weights: one stable
+    argsort, float64 accumulation (so the merged coefficients track the
+    dense scatter-add to an ulp regardless of duplicate count).  The
+    single source of the merge-by-summation semantics every packed
+    carrier shares (tile entries here, ring stripes in core/dataflow).
+    Returns (sorted unique keys, float32 merged weights)."""
+    order = np.argsort(key, kind="stable")
+    ks = key[order]
+    first = np.ones(ks.size, bool)
+    if ks.size:
+        first[1:] = ks[1:] != ks[:-1]
+    seg = np.cumsum(first) - 1
+    val = np.zeros(int(seg[-1]) + 1 if ks.size else 0, np.float64)
+    np.add.at(val, seg, w[order].astype(np.float64))
+    return ks[first], val.astype(np.float32)
+
+
+def pack_tile_store(store: EdgeTileStore) -> PackedTileStore:
+    """Derive the packed form from a built `EdgeTileStore`: one argsort
+    over (tile, row_local, col_local) merges multi-edges by summation —
+    O(E log E) host work, O(E) bytes, no T^2 anywhere."""
+    t = store.tile
+    counts = np.diff(store.edge_ptr)
+    tile_of = np.repeat(np.arange(store.nnzb, dtype=np.int64), counts)
+    key = ((tile_of * t + store.edge_li.astype(np.int64)) * t
+           + store.edge_lj.astype(np.int64))
+    ku, val = merge_by_key(key, store.edge_w)
+    entry_tile = ku // (t * t)
+    entry_ptr = np.searchsorted(entry_tile,
+                                np.arange(store.nnzb + 1)).astype(np.int64)
+    return PackedTileStore(
+        store.num_vertices, t, store.q, store.block_row, store.block_col,
+        entry_ptr,
+        ((ku // t) % t).astype(np.int32),
+        (ku % t).astype(np.int32),
+        val,
+        store.in_counts)
+
+
 def _tile_index(keys: np.ndarray, q: int) -> Tuple[np.ndarray, np.ndarray]:
     order = np.argsort(keys, kind="stable").astype(np.int64)
     groups = keys[order] // q

@@ -1,0 +1,170 @@
+"""Tile-format autotuner: packed vs dense, per (graph, backend).
+
+`EnGNConfig.tile_format="auto"` (the default) routes every tile-carrying
+backend (blocked / tiled / ring) through `choose_tile_format`, which
+records a `TileFormatChoice` in the prepared plan so benches and serving
+logs can show *why* a format was picked.
+
+Two policies share the decision:
+
+* **cost model** (default, free): compare the bytes each format stages —
+  packed entries cost 12 B each (row, col, val) after pow2 nnz-bucket
+  padding, dense tiles cost 4 T^2 B regardless of fill.  On power-law
+  graphs packed wins by 10-100x; on near-dense tiles (T small, tiles
+  full) dense wins and the MXU keeps its regular contraction.
+* **measured** (`measure=True`, used by the benches and cachable per
+  graph fingerprint): time one staged chunk both ways on a sample of
+  the *densest* tiles (the worst case for packed) across candidate nnz
+  bucket floors, and pick the fastest.  The measured choice also fixes
+  the bucket granularity (`bucket_floor`).
+
+Both record fill factors so the padding the packed format removes is
+visible (`TiledStats.fill_factor` / `RingStats.fill_factor`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.graphs.partition import (EdgeTileStore, PackedTileStore,
+                                    pow2_bucket)
+
+TILE_FORMATS = ("dense", "packed", "auto")
+
+
+@dataclasses.dataclass(frozen=True)
+class TileFormatChoice:
+    fmt: str                     # "dense" | "packed"
+    bucket_floor: int            # packed nnz-bucket floor (pow2)
+    fill_factor: float           # packed: nnz / padded entry slots
+    dense_fill: float            # nnz / (nnzb * T^2)
+    packed_bytes: int            # staged entry bytes, all tiles
+    dense_bytes: int             # staged dense-tile bytes, all tiles
+    reason: str                  # "forced" | "cost-model" | "measured"
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def packed_entry_bytes(slots: int) -> int:
+    """Bytes per staged packed entry slot: int32 row + int32 col +
+    float32 val."""
+    return 12 * slots
+
+
+def _model_choice(packed: PackedTileStore,
+                  bucket_floor: int = 8) -> TileFormatChoice:
+    dense_bytes = 4 * packed.nnzb * packed.tile * packed.tile
+    pbytes = packed_entry_bytes(packed.packed_slots(bucket_floor))
+    fmt = "packed" if pbytes < dense_bytes else "dense"
+    return TileFormatChoice(fmt, bucket_floor,
+                            packed.fill_factor(bucket_floor),
+                            packed.dense_fill(), pbytes, dense_bytes,
+                            "cost-model")
+
+
+def _forced_choice(fmt: str, packed: Optional[PackedTileStore],
+                   bucket_floor: int = 8) -> TileFormatChoice:
+    if packed is None:
+        return TileFormatChoice(fmt, bucket_floor, 1.0, 1.0, 0, 0,
+                                "forced")
+    base = _model_choice(packed, bucket_floor)
+    return dataclasses.replace(base, fmt=fmt, reason="forced")
+
+
+# measured choices are cached per graph fingerprint: the sample timing
+# costs a few jit compiles, which must not recur per layer/batch
+_MEASURED: Dict[Tuple, TileFormatChoice] = {}
+
+
+def _fingerprint(packed: PackedTileStore, backend: str, dim: int) -> Tuple:
+    return (backend, packed.num_vertices, packed.nnz, packed.nnzb,
+            packed.tile, pow2_bucket(dim, 1))
+
+
+def measured_choice(store: EdgeTileStore, packed: PackedTileStore, *,
+                    backend: str = "tiled", dim: int = 32,
+                    sample: int = 4, iters: int = 3,
+                    bucket_floors: Tuple[int, ...] = (8, 32),
+                    impl: Optional[str] = None) -> TileFormatChoice:
+    """Micro-benchmark one staged chunk of the `sample` densest tiles
+    (densest = packed's worst case) dense vs packed, per candidate
+    bucket floor; returns the fastest, cached per graph fingerprint."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.rer_gather import ops as gather_ops
+
+    key = _fingerprint(packed, backend, dim)
+    hit = _MEASURED.get(key)
+    if hit is not None:
+        return hit
+    nnz = packed.tile_nnz()
+    if nnz.size == 0:
+        choice = _model_choice(packed)
+        _MEASURED[key] = choice
+        return choice
+    idx = np.argsort(-nnz, kind="stable")[:sample].astype(np.int64)
+    t = packed.tile
+    k = idx.size
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.standard_normal((k, t, dim)).astype(np.float32))
+
+    def _time(fn, *args) -> float:
+        jax.block_until_ready(fn(*args))          # compile + warm
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    blocks = np.zeros((k, t, t), np.float32)
+    store.densify(idx, blocks)
+    blocks_dev = jnp.asarray(blocks)
+
+    def dense_step(b, x):
+        return jnp.einsum("ktu,kuf->tf", b, x,
+                          preferred_element_type=jnp.float32)
+
+    t_dense = _time(jax.jit(dense_step), blocks_dev, xs)
+    best: Optional[Tuple[float, int]] = None
+    for floor in bucket_floors:
+        bucket = packed.bucket_of(idx, floor)
+        rows, cols, vals = packed.pack(idx, k, bucket)
+        args = tuple(jnp.asarray(a) for a in (rows, cols, vals))
+        t_packed = _time(
+            lambda r, c, v: gather_ops.packed_tile_part(
+                r, c, v, xs, op="sum", impl=impl), *args)
+        if best is None or t_packed < best[0]:
+            best = (t_packed, floor)
+    t_packed, floor = best
+    base = _model_choice(packed, floor)
+    fmt = "packed" if t_packed < t_dense else "dense"
+    choice = dataclasses.replace(base, fmt=fmt, reason="measured")
+    _MEASURED[key] = choice
+    return choice
+
+
+def choose_tile_format(requested: str, packed: Optional[PackedTileStore],
+                       *, backend: str = "tiled",
+                       bucket_floor: int = 8, measure: bool = False,
+                       store: Optional[EdgeTileStore] = None,
+                       dim: int = 32) -> TileFormatChoice:
+    """Resolve an `EnGNConfig.tile_format` request into a concrete
+    choice recorded in the prepared plan."""
+    if requested not in TILE_FORMATS:
+        raise ValueError(
+            f"tile_format must be one of {TILE_FORMATS}, got "
+            f"{requested!r}")
+    if requested != "auto":
+        return _forced_choice(requested, packed, bucket_floor)
+    if packed is None:
+        return _forced_choice("dense", None, bucket_floor)
+    if measure and store is not None:
+        return measured_choice(store, packed, backend=backend, dim=dim,
+                               bucket_floors=(bucket_floor,
+                                              4 * bucket_floor))
+    return _model_choice(packed, bucket_floor)

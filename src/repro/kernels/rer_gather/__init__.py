@@ -1,0 +1,7 @@
+from repro.kernels.rer_gather import ops, ref
+from repro.kernels.rer_gather.ops import (PackedGroup, packed_spmm,
+                                          packed_tile_part,
+                                          prepare_packed_groups)
+
+__all__ = ["ops", "ref", "PackedGroup", "packed_spmm",
+           "packed_tile_part", "prepare_packed_groups"]

@@ -1,0 +1,52 @@
+"""Pure-numpy oracle for the packed-tile gather-aggregate kernel."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def packed_tile_part_ref(rows, cols, vals, xs, *, op: str) -> np.ndarray:
+    """(C, S) packed entries against (C, T, F) stacked source intervals
+    -> (T, F) raw partial for one destination interval: sum starts from
+    zero, max keeps -inf for uncovered rows (the caller finishes)."""
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    vals = np.asarray(vals, np.float32)
+    xs = np.asarray(xs, np.float32)
+    c, s = rows.shape
+    t, f = xs.shape[1], xs.shape[2]
+    if op == "sum":
+        out = np.zeros((t, f), np.float32)
+        for ci in range(c):
+            for si in range(s):
+                out[rows[ci, si]] += vals[ci, si] * xs[ci, cols[ci, si]]
+        return out
+    out = np.full((t, f), -np.inf, np.float32)
+    for ci in range(c):
+        for si in range(s):
+            if vals[ci, si] != 0.0:
+                cand = vals[ci, si] * xs[ci, cols[ci, si]]
+                out[rows[ci, si]] = np.maximum(out[rows[ci, si]], cand)
+    return out
+
+
+def packed_spmm_ref(rows, cols, vals, block_row, block_col, x, *, q: int,
+                    t: int, op: str) -> np.ndarray:
+    """Full-graph oracle: scatter every packed tile into Y (q*T, F)."""
+    x = np.asarray(x, np.float32)
+    f = x.shape[1]
+    fill = 0.0 if op == "sum" else -np.inf
+    out = np.full((q * t, f), fill, np.float32)
+    for k in range(np.asarray(block_row).shape[0]):
+        i, j = int(block_row[k]), int(block_col[k])
+        xs = x[j * t:(j + 1) * t]
+        for si in range(rows.shape[1]):
+            v = float(vals[k, si])
+            r = i * t + int(rows[k, si])
+            cand = v * xs[int(cols[k, si])]
+            if op == "sum":
+                out[r] += cand
+            elif v != 0.0:
+                out[r] = np.maximum(out[r], cand)
+    if op == "max":
+        out = np.where(np.isneginf(out), 0.0, out)
+    return out

@@ -1,0 +1,122 @@
+"""RER-Gather: the aggregate stage over *packed* edge tiles (Pallas).
+
+The sparsity-aware sibling of `rer_spmm` (DESIGN.md C8): instead of a
+dense T x T tile on the MXU, each grid step consumes one packed tile —
+S `(row_local, col_local, val)` entries, S being the tile's pow2 nnz
+bucket — and
+
+  1. gathers the referenced rows of the resident source-feature block
+     (a one-hot (S, T) selector contracted on the MXU, the TPU-friendly
+     spelling of a vector gather),
+  2. scales by the edge weight, and
+  3. scatter-accumulates into the destination interval (the transposed
+     one-hot contraction).
+
+Work and bytes are O(S) per tile instead of O(T^2) — on power-law
+graphs that removes the >95% structural zeros every dense-tile backend
+pays for (EnGN Sec. IV processes edges, not tile slots; VersaGNN /
+NeuraChip in PAPERS.md make the same case).
+
+Same hardware constraint as rer_spmm: the output block is revisited
+only on consecutive grid steps, so tiles must be dst-sorted with every
+destination interval present (`prepare_packed_groups` pads empty
+tiles).  Padding entries are (0, 0, 0.0): sum ignores them via the 0.0
+weight, max masks them with the val != 0 convention.
+
+The max variant materialises an (S, T, Fc) candidate tensor and is
+interpret/correctness oriented; the production CPU/GPU path is the XLA
+take+segment formulation in ops.py (the same dispatcher split as
+rer_spmm).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _one_hot(idx: jnp.ndarray, t: int) -> jnp.ndarray:
+    """(S,) int32 -> (S, T) float32 selector via broadcasted iota (the
+    Pallas-safe one-hot: no scatter, contractions run on the MXU)."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], t), 1)
+    return (idx[:, None] == iota).astype(jnp.float32)
+
+
+def _gather_kernel_sum(br_ref, bc_ref, rows_ref, cols_ref, vals_ref,
+                       x_ref, y_ref):
+    k = pl.program_id(1)
+    first = jnp.logical_or(
+        k == 0, br_ref[k] != br_ref[jnp.maximum(k - 1, 0)])
+    prev = jnp.where(first, jnp.zeros_like(y_ref), y_ref[...])
+    t = x_ref.shape[0]
+    gathered = jnp.dot(_one_hot(cols_ref[0], t), x_ref[...],
+                       preferred_element_type=jnp.float32)     # (S, Fc)
+    scaled = vals_ref[0][:, None] * gathered                   # pad: 0.0
+    contrib = jnp.dot(_one_hot(rows_ref[0], t).T, scaled,
+                      preferred_element_type=jnp.float32)      # (T, Fc)
+    y_ref[...] = prev + contrib
+
+
+def _gather_kernel_max(br_ref, bc_ref, rows_ref, cols_ref, vals_ref,
+                       x_ref, y_ref):
+    k = pl.program_id(1)
+    first = jnp.logical_or(
+        k == 0, br_ref[k] != br_ref[jnp.maximum(k - 1, 0)])
+    neg = jnp.full(y_ref.shape, -jnp.inf, jnp.float32)
+    prev = jnp.where(first, neg, y_ref[...])
+    t = x_ref.shape[0]
+    vals = vals_ref[0]
+    gathered = jnp.dot(_one_hot(cols_ref[0], t), x_ref[...],
+                       preferred_element_type=jnp.float32)     # (S, Fc)
+    scaled = vals[:, None] * gathered
+    sel = (rows_ref[0][:, None]
+           == jax.lax.broadcasted_iota(jnp.int32, (vals.shape[0], t), 1))
+    mask = jnp.logical_and(sel[:, :, None],
+                           (vals != 0.0)[:, None, None])       # (S, T, 1)
+    cand = jnp.where(mask, scaled[:, None, :], -jnp.inf)
+    y_ref[...] = jnp.maximum(prev, jnp.max(cand, axis=0))
+
+
+def rer_gather(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+               block_row: jnp.ndarray, block_col: jnp.ndarray,
+               x: jnp.ndarray, *, t: int, q_dst: int, op: str = "sum",
+               feature_chunk: int = 512, interpret: bool = False,
+               finish_max: bool = True) -> jnp.ndarray:
+    """Y[br*T:(br+1)*T] (+)= scatter(rows, vals * X[bc*T + cols]) per
+    packed tile k.
+
+    rows/cols/vals: (K, S) packed entries per tile (pad val = 0.0)
+    block_row:      (K,) int32 dst interval (non-decreasing, every
+                    interval 0..q_dst-1 present — prepare_packed_groups)
+    block_col:      (K,) int32 src interval into x
+    x:              (q_src*T, F) padded source features
+    """
+    k_tiles, s = rows.shape
+    n_src, f = x.shape
+    assert n_src % t == 0, (n_src, t)
+    fc = min(feature_chunk, f)
+    assert f % fc == 0, (f, fc)
+    kernel = _gather_kernel_sum if op == "sum" else _gather_kernel_max
+
+    grid = (f // fc, k_tiles)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, s), lambda j, k, br, bc: (k, 0)),
+                pl.BlockSpec((1, s), lambda j, k, br, bc: (k, 0)),
+                pl.BlockSpec((1, s), lambda j, k, br, bc: (k, 0)),
+                pl.BlockSpec((t, fc), lambda j, k, br, bc: (bc[k], j)),
+            ],
+            out_specs=pl.BlockSpec((t, fc),
+                                   lambda j, k, br, bc: (br[k], j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((q_dst * t, f), jnp.float32),
+        interpret=interpret,
+    )(block_row, block_col, rows, cols, vals, x)
+    if op == "max" and finish_max:
+        out = jnp.where(jnp.isneginf(out), 0.0, out)
+    return out

@@ -276,7 +276,8 @@ class GNNServingEngine:
         ops = {ly.cfg.aggregate_op for ly in self.layers}
         if len(ops) != 1:
             return None
-        from repro.core.dataflow import (build_ring_tile_shards,
+        from repro.core.dataflow import (build_packed_ring_shards,
+                                         build_ring_tile_shards,
                                          ring_stripe_bytes)
         from repro.core.engn import EnGNConfig, prepare_ring
         from repro.distributed.sharding import ring_mesh
@@ -284,15 +285,26 @@ class GNNServingEngine:
             mesh = ring_mesh(p)
         except ValueError:
             return None                       # fewer devices than shards
-        # price before building: one O(E) binning pass, no densify —
-        # an over-budget batch pays nothing for the rejected plan
+        # price both stripe carriers (dense tiles vs packed entries,
+        # DESIGN.md C8) before building — an over-budget batch pays
+        # nothing, and the cheaper format is built exactly once and
+        # handed to prepare_ring (which then re-checks nothing twice)
         dims = ([self.layers[0].cfg.in_dim]
                 + [ly.cfg.out_dim for ly in self.layers])
-        need = ring_stripe_bytes(g, p, tile=self.config.ring_tile,
-                                 in_dim=max(dims), out_dim=max(dims))
-        if need > self.config.device_budget_bytes:
+        dense_b = ring_stripe_bytes(g, p, tile=self.config.ring_tile,
+                                    in_dim=max(dims), out_dim=max(dims),
+                                    tile_format="dense")
+        packed_b = ring_stripe_bytes(g, p, tile=self.config.ring_tile,
+                                     in_dim=max(dims),
+                                     out_dim=max(dims),
+                                     tile_format="packed")
+        if min(dense_b, packed_b) > self.config.device_budget_bytes:
             return None
-        plan = build_ring_tile_shards(g, p, tile=self.config.ring_tile)
+        if packed_b <= dense_b:
+            plan = build_packed_ring_shards(g, p)
+        else:
+            plan = build_ring_tile_shards(g, p,
+                                          tile=self.config.ring_tile)
         cfg = EnGNConfig(in_dim=self.layers[0].cfg.in_dim,
                          out_dim=self.layers[-1].cfg.out_dim,
                          aggregate_op=ops.pop(), backend="ring",

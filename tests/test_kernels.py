@@ -96,6 +96,48 @@ def test_rer_spmm_unsorted_rejected_then_fixed_by_prepare():
     assert set(range(b.q)) <= set(brow.tolist())
 
 
+def test_prepare_blocks_single_sort_order_stability():
+    """Regression for the double-argsort in the missing-interval pad
+    path: one stable sort after concatenation must (a) keep real tiles
+    in their original relative order within each dst interval and (b)
+    place each pad tile in its own (previously missing) interval —
+    byte-identical to the old sort-pad-resort output."""
+    t, q = 4, 6
+    # rows deliberately unsorted, with duplicates; intervals 2 and 4
+    # have no tiles and must be padded
+    brow = np.array([5, 0, 3, 0, 5, 1], np.int32)
+    bcol = np.array([1, 2, 3, 4, 5, 0], np.int32)
+    blocks = np.arange(6 * t * t, dtype=np.float32).reshape(6, t, t) + 1
+    got_b, got_r, got_c = spmm_ops.prepare_blocks(blocks, brow, bcol, q)
+
+    def reference(blocks, brow, bcol):      # the old two-sort behaviour
+        order = np.argsort(brow, kind="stable")
+        blocks, brow, bcol = blocks[order], brow[order], bcol[order]
+        present = np.zeros(q, bool)
+        present[brow] = True
+        missing = np.nonzero(~present)[0].astype(np.int32)
+        blocks = np.concatenate(
+            [blocks, np.zeros((missing.size, t, t), blocks.dtype)])
+        brow = np.concatenate([brow, missing])
+        bcol = np.concatenate([bcol, missing])
+        order = np.argsort(brow, kind="stable")
+        return blocks[order], brow[order], bcol[order]
+
+    want_b, want_r, want_c = reference(blocks, brow, bcol)
+    np.testing.assert_array_equal(got_r, want_r)
+    np.testing.assert_array_equal(got_c, want_c)
+    np.testing.assert_array_equal(got_b, want_b)
+    # the invariants the kernel needs, spelled out
+    np.testing.assert_array_equal(got_r, [0, 0, 1, 2, 3, 4, 5, 5])
+    assert (np.diff(got_r) >= 0).all()
+    # within interval 0 and 5 the original tile order is preserved
+    np.testing.assert_array_equal(got_c[:2], [2, 4])
+    np.testing.assert_array_equal(got_c[-2:], [1, 5])
+    # pad tiles are all-zero and sit on the diagonal of their interval
+    assert got_b[3].sum() == 0 and got_c[3] == 2
+    assert got_b[5].sum() == 0 and got_c[5] == 4
+
+
 def test_rer_spmm_empty_rows_zero():
     """Vertices with no in-edges must aggregate to exactly zero (sum) and
     zero (max, by the non-edge convention)."""
