@@ -1,7 +1,9 @@
-"""Tiled out-of-core executor (S5 / C7 / C8) — end-to-end streamed vs
-dense throughput, packed vs dense tile format (speedup, fill factor,
-parity), transfer/compute overlap from double buffering, and the
-streamed traffic counters, across Table-5 dataset sizes."""
+"""Tiled out-of-core executor (S5 / C7 / C8 / C9) — end-to-end
+streamed vs dense throughput, packed vs dense tile format (speedup,
+fill factor, parity), transfer/compute overlap from double buffering,
+the streamed traffic counters, and the train-step row (fwd+bwd through
+the streamed VJP vs the dense-blocked backend) across Table-5 dataset
+sizes."""
 from __future__ import annotations
 
 import time
@@ -139,6 +141,49 @@ def run():
              "allclose(1e-5) gate on gcn-normalised weights")
         assert np.array_equal(a, b), "packed sum parity broke"
         assert err < 1e-5, f"packed mean parity broke: {err}"
+
+        # train-step row (C9): one full fwd+bwd GCN layer step through
+        # the streamed VJP under the same budget, vs the dense-blocked
+        # backend — the reverse path turns the budgeted configuration
+        # from inference-only into the trainable default
+        coef = jnp.asarray(random_features(g.num_vertices, HIDDEN,
+                                           seed=3))
+        xj = jnp.asarray(x)
+        t_layer = make_gnn("gcn", f, HIDDEN, backend="tiled", tile=256)
+        t_layer.cfg.device_budget_bytes = budget
+        t_layer.cfg.training = True
+        gtt = prepare_graph(gn, t_layer.cfg)
+        ex_t = gtt["tiled_exec"]
+        params_t = t_layer.init(jax.random.key(1))
+
+        def tiled_loss(p, xx):
+            return jnp.sum(t_layer.apply(p, gtt, xx) * coef)
+
+        tiled_step = jax.jit(jax.value_and_grad(tiled_loss,
+                                                argnums=(0, 1)))
+        ex_t.reset_stats()
+        t_train = _median_us(tiled_step, params_t, xj, iters=3)
+        s = ex_t.stats
+        emit(f"tiled/{ds}/train_fwdbwd_us", round(t_train, 1),
+             f"streamed VJP fmt={gtt['tiled_meta']['tile_format']} "
+             f"bwd_h2d_mb={(s.bwd_h2d_tile_bytes + s.bwd_h2d_x_bytes) / 1e6:.1f} "
+             f"bwd_d2h_mb={s.bwd_d2h_bytes / 1e6:.1f}")
+        emit(f"tiled/{ds}/train_fwdbwd_edges_per_s",
+             round(g.num_edges / (t_train / 1e6), 1),
+             f"fwd+bwd step, bwd_tiles={s.bwd_tiles}")
+
+        b_layer = make_gnn("gcn", f, HIDDEN, backend="blocked", tile=256)
+        gbt = prepare_graph(gn, b_layer.cfg)    # unbudgeted reference
+
+        def blocked_loss(p, xx):
+            return jnp.sum(b_layer.apply(p, gbt, xx) * coef)
+
+        blocked_step = jax.jit(jax.value_and_grad(blocked_loss,
+                                                  argnums=(0, 1)))
+        t_btrain = _median_us(blocked_step, params_t, xj, iters=3)
+        emit(f"tiled/{ds}/train_blocked_us", round(t_btrain, 1),
+             f"device-resident fwd+bwd, streamed/blocked="
+             f"{t_train / max(t_btrain, 1.0):.2f}x")
 
         # overlap ablation: double-buffered streaming vs serialised
         # (aggregate at the hidden dim — the post-DASR streamed width)

@@ -7,10 +7,11 @@ bench-smoke job runs it and uploads the CSV as an artifact so the perf
 trajectory is recorded per PR.
 
 Emits ``name,value,derived`` CSV rows (also saved to
-experiments/bench_results.csv), plus a machine-readable ``BENCH_4.json``
-summary — per-bench best throughput, packed-vs-dense speedups and the
-parity gates — so the perf trajectory can be diffed across PRs without
-parsing the CSV.
+experiments/bench_results.csv), plus a machine-readable ``BENCH_5.json``
+summary — per-bench best throughput, the train-step (fwd+bwd) rows,
+packed-vs-dense speedups and the parity gates — so the perf trajectory
+can be diffed across PRs without parsing the CSV.  (BENCH_4.json is the
+committed snapshot of the previous PR's sweep.)
 """
 from __future__ import annotations
 
@@ -73,16 +74,16 @@ def main() -> int:
     print(f"# wrote {out}")
 
     summary = summarize(rows(), smoke=args.smoke)
-    Path("BENCH_4.json").write_text(json.dumps(summary, indent=2,
+    Path("BENCH_5.json").write_text(json.dumps(summary, indent=2,
                                                sort_keys=True) + "\n")
-    print("# wrote BENCH_4.json")
+    print("# wrote BENCH_5.json")
     return 0
 
 
 def summarize(csv_rows, smoke: bool) -> dict:
     """Condense the CSV rows into the PR's perf-trajectory point: the
-    best throughput per bench, every packed-vs-dense speedup, and the
-    packed parity gates."""
+    best throughput per bench, the train-step (fwd+bwd) rows, every
+    packed-vs-dense speedup, and the packed parity gates."""
     parsed = []
     for row in csv_rows:
         name, value, derived = row.split(",", 2)
@@ -99,9 +100,10 @@ def summarize(csv_rows, smoke: bool) -> dict:
             if value > best.get(bench, {}).get("value", 0.0):
                 best[bench] = {"row": name, "value": value}
     return {
-        "issue": 4,
+        "issue": 5,
         "smoke": smoke,
         "best_throughput": best,
+        "train": {n: v for n, v, _ in parsed if "/train_" in n},
         "packed_vs_dense": {n: v for n, v, _ in parsed
                             if "packed_speedup" in n},
         "parity": {n: v for n, v, _ in parsed if "parity" in n},

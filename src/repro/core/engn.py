@@ -18,6 +18,18 @@ Device-memory budget: when `EnGNConfig.device_budget_bytes` is set,
 and either spills to the streamed "tiled" backend (`auto_spill=True`,
 the default) or raises `DeviceBudgetExceeded` — graphs larger than one
 device run via core/tiled.py instead of OOMing.
+
+The streamed backend is trainable (DESIGN.md C9): under a jit/grad
+trace the layer routes the aggregate through a `jax.custom_vjp`
+wrapper whose backward re-streams the same host tiles in transposed
+(src <-> dst) order, so the budget-dominating graph payloads (tiles,
+edge entries, the (E, d)-scale intermediates) stay streamed in the
+reverse pass too.  Features and their cotangents remain device-
+resident in training — extraction/update are ordinary traced ops —
+and `EnGNConfig.training=True` prices exactly those resident
+activation twins into the budget gate (`dense_footprint_bytes`
+doubles the activation terms; `tiled_meta["resident_feature_bytes"]`
+records what training keeps resident).
 """
 from __future__ import annotations
 
@@ -30,12 +42,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tiled import (DeviceBudgetExceeded, TiledExecutor,
-                              dense_footprint_bytes)
+                              dense_footprint_bytes,
+                              make_streamed_aggregate)
 from repro.graphs.format import COOGraph, coo_to_blocked
 from repro.graphs.partition import tile_schedule_order
 
 
 AggregateOp = str  # "sum" | "max" | "mean"
+
+
+def _is_traced(*vals) -> bool:
+    """True when any leaf of the given pytrees is a jax tracer — i.e.
+    we are inside a jit/grad trace and host-loop paths cannot run."""
+    return any(isinstance(leaf, jax.core.Tracer)
+               for v in vals for leaf in jax.tree_util.tree_leaves(v))
 
 
 def segment_aggregate(edge_vals: jnp.ndarray, dst: jnp.ndarray, n: int,
@@ -88,6 +108,12 @@ class EnGNConfig:
     device_budget_bytes: Optional[int] = None
     auto_spill: bool = True
     tiled_chunk: int = 8              # tiles per streamed device step
+    # training=True prices the budget gate for forward AND backward
+    # (cotangent twins double the activation terms; the streamed tiled
+    # executor pre-sizes its step for the wider backward streams) —
+    # set by training entry points (launch/train.py --gnn), left False
+    # for inference/serving.
+    training: bool = False
     dtype: Any = jnp.float32
 
 
@@ -138,6 +164,11 @@ class EnGNLayer:
         tile store when the effective backend is the streamed "tiled")."""
         backend = graph.get("backend", self.cfg.backend)
         if backend == "tiled" and aggregate_fn is None:
+            # under a jit/grad trace (training, or a jitted caller) the
+            # host streaming loop cannot run on tracers: route through
+            # the custom_vjp wrapper (C9) instead of the eager host path
+            if _is_traced(params, x):
+                return self._apply_tiled_diff(params, graph, x)
             return self._apply_tiled(params, graph, x)
         agg = aggregate_fn or partial(self._aggregate, graph)
         linear_sum = (self.cfg.aggregate_op == "sum"
@@ -162,6 +193,29 @@ class EnGNLayer:
         tmp = self.feature_extraction(params, x)        # XW  (per src vertex)
         h = agg(tmp)                                    # A(XW)
         return self.update(params, x, h)
+
+    # -- streamed out-of-core path, differentiable (DESIGN.md C9) ---------
+    def _apply_tiled_diff(self, params, graph, x) -> jnp.ndarray:
+        """The trainable twin of `_apply_tiled`: extraction and update
+        are ordinary traced jax ops (their VJPs come from XLA), while
+        the aggregate runs through `make_streamed_aggregate` — a
+        `jax.custom_vjp`-wrapped host callback whose backward
+        re-streams the transposed tile store.  Features are device-
+        resident here (they already are in any training step); only
+        the graph stays out-of-core."""
+        cfg = self.cfg
+        ex: TiledExecutor = graph["tiled_exec"]
+        agg = make_streamed_aggregate(ex, cfg.aggregate_op)
+        x = jnp.asarray(x, jnp.float32)
+        linear_sum = (cfg.aggregate_op == "sum"
+                      and type(self).feature_extraction
+                      is EnGNLayer.feature_extraction)
+        if linear_sum and self.dasr_order() == "afu":
+            ax = agg(x)                                  # (AX)
+            return self.update(params, x,
+                               self.feature_extraction(params, ax))
+        tmp = self.feature_extraction(params, x)         # XW
+        return self.update(params, x, agg(tmp))          # A(XW)
 
     # -- streamed out-of-core path (core/tiled.py, DESIGN.md C7) ----------
     def _tiled_stage_fns(self):
@@ -218,6 +272,16 @@ class EnGNLayer:
         if backend in ("blocked", "fused"):
             n = graph["n"]
             pad_n = graph["blocks_meta"]["padded"]
+            # mean rides the sum machinery: blocked-sum then divide by
+            # the in-edge counts (the exact floats segment mean divides
+            # by), so every tile carrier supports all three ops
+            base_op = "sum" if cfg.aggregate_op == "mean" else cfg.aggregate_op
+
+            def _finish(y):
+                if cfg.aggregate_op != "mean":
+                    return y[:n]
+                return (y[:n]
+                        / jnp.maximum(graph["in_counts"], 1.0)[:, None])
             xf = jnp.zeros((pad_n, feat.shape[1]), feat.dtype).at[:n].set(feat)
             if "packed_flat" in graph:
                 # off-TPU: one flat gather+segment launch beats a
@@ -225,9 +289,8 @@ class EnGNLayer:
                 from repro.kernels.rer_gather import ops as gather_ops
                 gsrc, gdst, gval = graph["packed_flat"]
                 y = gather_ops.packed_flat_xla(
-                    gsrc, gdst, gval, xf, n=xf.shape[0],
-                    op=cfg.aggregate_op)
-                return y[:n]
+                    gsrc, gdst, gval, xf, n=xf.shape[0], op=base_op)
+                return _finish(y)
             if "packed_groups" in graph:
                 from repro.kernels.rer_gather import ops as gather_ops
                 q = graph["blocks_meta"]["q"]
@@ -238,22 +301,22 @@ class EnGNLayer:
                     part = gather_ops.packed_spmm(
                         gr["rows"], gr["cols"], gr["vals"],
                         gr["block_row"], gr["block_col"], xf, q=q,
-                        op=cfg.aggregate_op, finish=False)
+                        op=base_op, finish=False)
                     if y is None:
                         y = part
-                    elif cfg.aggregate_op == "sum":
+                    elif base_op == "sum":
                         y = y + part
                     else:
                         y = jnp.maximum(y, part)
-                if cfg.aggregate_op == "max":
+                if base_op == "max":
                     y = jnp.where(jnp.isneginf(y), 0.0, y)
-                return y[:n]
+                return _finish(y)
             from repro.kernels.rer_spmm import ops as spmm_ops
             y = spmm_ops.blocked_spmm(graph["blocks"], graph["block_row"],
                                       graph["block_col"], xf,
                                       q=graph["blocks_meta"]["q"],
-                                      op=cfg.aggregate_op)
-            return y[:n]
+                                      op=base_op)
+            return _finish(y)
         if backend == "tiled":
             # unreachable from apply() (it routes to _apply_tiled before
             # binding _aggregate); a direct caller would get host arrays
@@ -279,9 +342,13 @@ def prepare_tiled(g: COOGraph, cfg: EnGNConfig,
     Q x Q edge-tile store stays in host memory; tile/chunk sizes are
     fitted to the device budget for the layer's wider feature dim."""
     h = out_dim if out_dim is not None else cfg.out_dim
+    # training pre-sizes the streaming step for the backward sweeps:
+    # the max VJP streams a (y, g/cnt) stack twice as wide as the
+    # forward activations (DESIGN.md C9)
+    dim_hint = max(cfg.in_dim, h) * (2 if cfg.training else 1)
     ex = TiledExecutor(g, tile=cfg.tile, chunk=cfg.tiled_chunk,
                        budget_bytes=cfg.device_budget_bytes, impl=impl,
-                       dim_hint=max(cfg.in_dim, h),
+                       dim_hint=dim_hint,
                        tile_format=cfg.tile_format,
                        bucket_floor=cfg.packed_bucket_floor)
     return {"n": g.num_vertices, "backend": "tiled", "tiled_exec": ex,
@@ -290,7 +357,19 @@ def prepare_tiled(g: COOGraph, cfg: EnGNConfig,
                            "order": tile_schedule_order(cfg.in_dim, h),
                            "host_bytes": ex.store.nbytes(),
                            "tile_format": ex.tile_format,
-                           "format_choice": ex.format_choice}}
+                           "format_choice": ex.format_choice,
+                           # reverse path (C9): every tileable model
+                           # can now train through the streamed
+                           # executor via the custom_vjp wrapper
+                           "trainable": True,
+                           "training": cfg.training,
+                           # what a training step keeps device-resident
+                           # (features + their cotangents; the graph
+                           # itself streams) — callers can check this
+                           # against their real device memory
+                           "resident_feature_bytes":
+                               (2 if cfg.training else 1) * 4
+                               * g.num_vertices * (cfg.in_dim + h)}}
 
 
 def prepare_ring(g: COOGraph, cfg: EnGNConfig,
@@ -337,8 +416,10 @@ def prepare_ring(g: COOGraph, cfg: EnGNConfig,
         else:
             plan = build_ring_tile_shards(g, p, tile=cfg.tile)
     packed = isinstance(plan, PackedRingShards)
-    need = plan.device_bytes() + ring_feature_bytes(plan.n_loc,
-                                                    cfg.in_dim, h)
+    feat_need = ring_feature_bytes(plan.n_loc, cfg.in_dim, h)
+    if cfg.training:
+        feat_need *= 2          # cotangent twins of the rotating shards
+    need = plan.device_bytes() + feat_need
     if cfg.device_budget_bytes and need > cfg.device_budget_bytes:
         if not cfg.auto_spill:
             raise DeviceBudgetExceeded(
@@ -389,7 +470,8 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
                                      cfg.in_dim, h, backend,
                                      tile=cfg.tile,
                                      has_val=g.val is not None,
-                                     tile_format=cfg.tile_format)
+                                     tile_format=cfg.tile_format,
+                                     training=cfg.training)
         if need > cfg.device_budget_bytes:
             if not cfg.auto_spill:
                 raise DeviceBudgetExceeded(
@@ -413,14 +495,20 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
         # (output tiles must be revisited consecutively), so the blocks
         # are always dst-sorted before upload — see rer_spmm docstring.
         order = tile_schedule_order(cfg.in_dim, h)
-        # Tile format (C8): the fused kernel mandates dense tiles, and
-        # mean never reaches blocked_spmm (it is a sum + divide at the
-        # segment level only) — both pin dense, as does an explicit
-        # tile_format="dense" (no store build at all in that case);
-        # otherwise the autotuner prices packed entries vs dense blocks.
+        # mean = blocked sum + divide by the in-edge counts (the exact
+        # floats segment mean divides by) — _aggregate finishes with
+        # them, so every tile carrier supports all three ops; sum/max
+        # never read the counts, so they skip the build and upload
+        if cfg.aggregate_op == "mean":
+            d["in_counts"] = jnp.asarray(
+                np.bincount(g.dst, minlength=g.num_vertices)
+                .astype(np.float32))
+        # Tile format (C8): the fused kernel mandates dense tiles and
+        # pins dense, as does an explicit tile_format="dense" (no store
+        # build at all in that case); otherwise the autotuner prices
+        # packed entries vs dense blocks (mean rides the sum carrier).
         choice = None
-        if (backend == "blocked" and cfg.aggregate_op in ("sum", "max")
-                and cfg.tile_format != "dense"):
+        if backend == "blocked" and cfg.tile_format != "dense":
             from repro.graphs.partition import (build_tile_store,
                                                 pack_tile_store)
             from repro.kernels.autotune import choose_tile_format
@@ -452,8 +540,12 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
                     tile_bytes = sum(gr.nbytes() for gr in groups)
                 # re-check the *actually built* plan against the budget
                 # (the closed-form gate above prices nnz bounds, not the
-                # per-group interval padding) — mirror prepare_ring
-                need = tile_bytes + 4 * g.num_vertices * (cfg.in_dim + h)
+                # per-group interval padding) — mirror prepare_ring,
+                # with the training cotangent twins doubling the
+                # feature term exactly as dense_footprint_bytes does
+                act = 2 if cfg.training else 1
+                need = (tile_bytes
+                        + act * 4 * g.num_vertices * (cfg.in_dim + h))
                 if (cfg.device_budget_bytes
                         and need > cfg.device_budget_bytes):
                     d.pop("packed_flat", None)

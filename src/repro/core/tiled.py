@@ -37,6 +37,7 @@ semantics matter.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from collections import OrderedDict
 from functools import partial
@@ -49,7 +50,9 @@ import numpy as np
 from repro.graphs.format import COOGraph
 from repro.graphs.partition import (EdgeTileStore, PackedTileStore,
                                     build_tile_store, chunk_tile_row,
-                                    pack_tile_store, tile_schedule_order)
+                                    pack_tile_store, tile_schedule_order,
+                                    transpose_packed_store,
+                                    transpose_tile_store)
 
 
 class DeviceBudgetExceeded(RuntimeError):
@@ -64,9 +67,17 @@ def dense_footprint_bytes(num_vertices: int, num_edges: int, in_dim: int,
                           out_dim: int, backend: str = "segment",
                           tile: int = 256, has_val: bool = True,
                           num_shards: int = 1,
-                          tile_format: str = "dense") -> int:
+                          tile_format: str = "dense",
+                          training: bool = False) -> int:
     """Device bytes a graph-resident backend needs — the gate that
     decides when to spill to the streamed tiled executor.
+
+    `training=True` prices the reverse pass too: every activation-
+    shaped term doubles (each forward buffer has a cotangent twin under
+    reverse-mode AD) while the graph structure (edge lists, tiles) is a
+    constant with no gradient — so a graph can fit for inference yet
+    spill to the streamed executor for training, which now has a
+    reverse path of its own (DESIGN.md C9).
 
     `tile_format` prices the tile-carrying backends in the bytes they
     actually stage: "dense" is the historical 4 T^2 per tile, "packed"
@@ -82,10 +93,11 @@ def dense_footprint_bytes(num_vertices: int, num_edges: int, in_dim: int,
     stripe term with the actually-built plan before deciding to
     spill — this closed form is for sizing without a build)."""
     n, e, f, h = num_vertices, num_edges, in_dim, out_dim
-    feat = 4 * n * (f + h)                    # resident X and H
+    act = 2 if training else 1                # cotangent twin per buffer
+    feat = act * 4 * n * (f + h)              # resident X and H
     if backend == "segment":
         edges = e * (8 + (4 if has_val else 0))
-        return feat + edges + 4 * e * max(f, h)   # (E, d) gather buffer
+        return feat + edges + act * 4 * e * max(f, h)  # (E, d) gather
     if backend in ("blocked", "fused"):
         q = -(-n // tile)
         nnzb_ub = min(q * q, max(e, 1))
@@ -105,7 +117,7 @@ def dense_footprint_bytes(num_vertices: int, num_edges: int, in_dim: int,
         # stripe upper bound: min(dense stripe, every edge in its own
         # tile, padding replicating the worst (dst, src) pair P times)
         per_dev_tiles = min(q_loc * q, p * max(e, 1))
-        feat_ring = 4 * n_loc * (2 * f + h)
+        feat_ring = act * 4 * n_loc * (2 * f + h)
         dense = feat_ring + 4 * per_dev_tiles * t * t + 8 * per_dev_tiles
         packed = feat_ring + 12 * (2 * e + 8 * p) + 4 * n_loc
         if tile_format == "dense":
@@ -175,6 +187,93 @@ def _acc_max(acc, part):
     return jnp.maximum(acc, part)
 
 
+@jax.jit
+def _merge_max_count(acc_val, acc_cnt, m, c):
+    """Associative merge of (running max, tie count) pairs: a strictly
+    better chunk replaces the count, an exact tie adds to it (the -inf
+    'no edges yet' state never ties thanks to the isfinite mask)."""
+    better = m > acc_val
+    ties = (m == acc_val) & jnp.isfinite(m)
+    return (jnp.maximum(acc_val, m),
+            jnp.where(better, c, acc_cnt + jnp.where(ties, c, 0.0)))
+
+
+@jax.jit
+def _chunk_step_max_count(acc_val, acc_cnt, blocks, xs):
+    """Max chunk step that also counts, per (dst row, feature), how
+    many edge products achieve the maximum — the residual the streamed
+    VJP needs to split the cotangent evenly among tied winners
+    (DESIGN.md C9), bitwise the convention of jax's segment_max grad."""
+    vals = jnp.where(blocks[..., None] != 0.0,
+                     blocks[..., None] * xs[:, None, :, :], -jnp.inf)
+    m = jnp.max(vals, axis=(0, 2))
+    c = jnp.sum(jnp.where((vals == m[None, :, None, :])
+                          & jnp.isfinite(vals), 1.0, 0.0), axis=(0, 2))
+    return _merge_max_count(acc_val, acc_cnt, m, c)
+
+
+@jax.jit
+def _packed_step_max_count(acc_val, acc_cnt, rows, cols, vals, xs):
+    """Packed-format twin of `_chunk_step_max_count`: the products are
+    the exact floats `packed_tile_part` computes, so the captured max
+    and counts are consistent with the packed forward bit-for-bit."""
+    c, s = rows.shape
+    t, f = xs.shape[1], xs.shape[2]
+    gcols = (jnp.arange(c, dtype=jnp.int32)[:, None] * t
+             + cols).reshape(c * s)
+    gathered = jnp.take(xs.reshape(c * t, f), gcols, axis=0)
+    v = vals.reshape(c * s)
+    scaled = jnp.where((v != 0.0)[:, None], v[:, None] * gathered,
+                       -jnp.inf)
+    seg = rows.reshape(c * s)
+    m = jax.ops.segment_max(scaled, seg, num_segments=t)
+    cnt = jax.ops.segment_sum(
+        jnp.where((scaled == m[seg]) & (v != 0.0)[:, None], 1.0, 0.0),
+        seg, num_segments=t)
+    return _merge_max_count(acc_val, acc_cnt, m, cnt)
+
+
+@jax.jit
+def _chunk_maxbwd_dense(acc, xv, blocks, ygs):
+    """One transposed backward chunk for max (dense tiles): `blocks`
+    are the TRANSPOSED tiles (rows = src-local u, cols = dst-local t),
+    `xv` the resident source interval, `ygs` the streamed (y, g/cnt)
+    destination-interval stack.  Each edge product is recomputed with
+    the exact operands of the forward (B^T[u, t] == B[t, u], same
+    float), so the winner test is a bitwise equality, never a
+    tolerance."""
+    d = ygs.shape[-1] // 2
+    ys, gs = ygs[..., :d], ygs[..., d:]
+    prod = jnp.where(blocks[..., None] != 0.0,
+                     blocks[..., None] * xv[None, :, None, :], jnp.inf)
+    match = prod == ys[:, None, :, :]
+    return acc + jnp.sum(
+        jnp.where(match, blocks[..., None] * gs[:, None, :, :], 0.0),
+        axis=(0, 2))
+
+
+@jax.jit
+def _chunk_maxbwd_packed(acc, xv, rows, cols, vals, ygs):
+    """Packed twin of `_chunk_maxbwd_dense`: rows/cols come from the
+    transposed packed store, so `rows` index the resident source
+    interval (and the gx accumulator) and `cols` the streamed (y,
+    g/cnt) stack."""
+    c, s = rows.shape
+    t = xv.shape[0]
+    d = ygs.shape[-1] // 2
+    v = vals.reshape(c * s)
+    srcl = rows.reshape(c * s)
+    gdst = (jnp.arange(c, dtype=jnp.int32)[:, None] * t
+            + cols).reshape(c * s)
+    flat = ygs.reshape(c * t, 2 * d)
+    y_at = jnp.take(flat[:, :d], gdst, axis=0)
+    g_at = jnp.take(flat[:, d:], gdst, axis=0)
+    prod = v[:, None] * jnp.take(xv, srcl, axis=0)
+    match = (v != 0.0)[:, None] & (prod == y_at)
+    return acc + jax.ops.segment_sum(
+        jnp.where(match, v[:, None] * g_at, 0.0), srcl, num_segments=t)
+
+
 @partial(jax.jit, static_argnames=("op", "impl", "q"))
 def _chunk_step_kernel(acc, blocks, xs, *, op, impl, q):
     """Same chunk reduction expressed through the RER-SpMM kernel
@@ -213,6 +312,24 @@ class TiledStats:
     staged_slots: int = 0
     packed_tile_bytes: int = 0        # h2d tile bytes when packed
     dense_tile_bytes: int = 0         # h2d tile bytes when dense
+    # backward-pass traffic (DESIGN.md C9): the streamed VJP re-streams
+    # the transposed tile store, so its transfers are accounted here
+    # separately from the forward counters above
+    bwd_steps: int = 0
+    bwd_tiles: int = 0
+    bwd_h2d_tile_bytes: int = 0
+    bwd_h2d_x_bytes: int = 0
+    bwd_d2h_bytes: int = 0
+
+    def add_backward(self, other: "TiledStats"):
+        """Fold one backward sweep's forward-shaped counters (the
+        transposed executor counts its own streaming as 'forward')
+        into this executor's bwd_* accumulators."""
+        self.bwd_steps += other.steps
+        self.bwd_tiles += other.tiles
+        self.bwd_h2d_tile_bytes += other.h2d_tile_bytes
+        self.bwd_h2d_x_bytes += other.h2d_x_bytes
+        self.bwd_d2h_bytes += other.d2h_bytes
 
     def fill_factor(self) -> float:
         """Real entries / padded slots staged so far (1.0 = no padding
@@ -271,6 +388,41 @@ class TiledExecutor:
         self.x_cache_cap = max(2, x_cache)
         self.stats = TiledStats()
         self._xcache: OrderedDict = OrderedDict()
+        self._transposed: Optional["TiledExecutor"] = None
+        self._diff_cache: Dict[str, Callable] = {}
+
+    @classmethod
+    def _from_stores(cls, store: EdgeTileStore,
+                     packed: Optional[PackedTileStore], *,
+                     like: "TiledExecutor") -> "TiledExecutor":
+        """An executor over prebuilt stores, inheriting every streaming
+        parameter from `like` (the transposed backward view shares the
+        forward executor's tile/chunk/budget/format decisions)."""
+        # shallow copy so any future __init__ attribute is inherited by
+        # construction; only the stores and the mutable per-executor
+        # state are replaced
+        ex = copy.copy(like)
+        ex.store = store
+        ex.packed = packed
+        ex.stats = TiledStats()
+        ex._xcache = OrderedDict()
+        ex._transposed = None
+        ex._diff_cache = {}
+        return ex
+
+    def transposed(self) -> "TiledExecutor":
+        """The A^T view of this executor (cached): same host edge
+        arrays (zero copy — see `transpose_tile_store`), same streaming
+        parameters, its own stats.  The streamed VJP re-streams these
+        transposed tiles instead of keeping forward activations
+        resident (DESIGN.md C9)."""
+        if self._transposed is None:
+            tst = transpose_tile_store(self.store)
+            tps = (transpose_packed_store(self.packed)
+                   if self.packed is not None else None)
+            self._transposed = TiledExecutor._from_stores(tst, tps,
+                                                          like=self)
+        return self._transposed
 
     # -- public API ----------------------------------------------------
     def reset_stats(self):
@@ -544,6 +696,147 @@ class TiledExecutor:
             out = np.where(np.isneginf(out), 0.0, out)
         return out[:st.num_vertices]
 
+    # -- reverse path (DESIGN.md C9) -----------------------------------
+    def aggregate_max_forward(self, x: np.ndarray
+                              ) -> Tuple[np.ndarray, np.ndarray]:
+        """Streamed max that also captures the backward residual:
+        returns (y, counts), counts[i, f] = how many edge products
+        achieved y[i, f].  The streamed VJP splits the cotangent evenly
+        among tied winners — the same convention as jax's segment_max
+        gradient, so streamed and device-resident grads agree on ties.
+        Column (dst-stationary) order only: the (max, count) pair
+        merges associatively per destination interval."""
+        x = np.ascontiguousarray(np.asarray(x, np.float32))
+        if x.shape[0] != self.store.num_vertices:
+            raise ValueError((x.shape, self.store.num_vertices))
+        d = x.shape[1]
+        st = self.store
+        t, q = st.tile, st.q
+        chunk = self.effective_chunk(d)
+        y = np.zeros((st.num_vertices, d), np.float32)
+        cnt = np.zeros((st.num_vertices, d), np.float32)
+        steps: List[Tuple[int, np.ndarray]] = []
+        for i in range(q):
+            for c in chunk_tile_row(st.row_tiles(i), chunk,
+                                    snake=(i % 2 == 1)):
+                steps.append((i, c))
+        if not steps:
+            return y, cnt
+        self._xcache = OrderedDict()
+
+        def flush(i, acc_v, acc_c):
+            hv = np.asarray(_finish_max(acc_v))
+            hc = np.asarray(acc_c)
+            self.stats.d2h_bytes += hv.nbytes + hc.nbytes
+            lo = i * t
+            m = min((i + 1) * t, st.num_vertices) - lo
+            if m > 0:
+                y[lo:lo + m] = hv[:m]
+                cnt[lo:lo + m] = hc[:m]
+
+        staged = self._stage_chunk(steps[0][1], x, None, chunk)
+        acc_v = acc_c = None
+        cur_row: Optional[int] = None
+        for s, (i, idx) in enumerate(steps):
+            payload, xs_dev = staged
+            if i != cur_row:
+                if cur_row is not None:
+                    flush(cur_row, acc_v, acc_c)
+                acc_v = jnp.full((t, d), -jnp.inf, jnp.float32)
+                acc_c = jnp.zeros((t, d), jnp.float32)
+                cur_row = i
+            if self.double_buffer and s + 1 < len(steps):
+                staged = self._stage_chunk(steps[s + 1][1], x, None, chunk)
+            if self.tile_format == "packed":
+                rows, cols, vals = payload
+                acc_v, acc_c = _packed_step_max_count(acc_v, acc_c, rows,
+                                                      cols, vals, xs_dev)
+            else:
+                acc_v, acc_c = _chunk_step_max_count(acc_v, acc_c,
+                                                     payload, xs_dev)
+            self.stats.steps += 1
+            if not self.double_buffer and s + 1 < len(steps):
+                jax.block_until_ready(acc_v)
+                staged = self._stage_chunk(steps[s + 1][1], x, None, chunk)
+        flush(cur_row, acc_v, acc_c)
+        return y, cnt
+
+    def max_vjp(self, x: np.ndarray, y: np.ndarray, cnt: np.ndarray,
+                g: np.ndarray) -> np.ndarray:
+        """Backward of the streamed max: re-stream the same tiles in
+        transposed (src <-> dst) order, recompute every edge product
+        against the saved forward max, and scatter g/cnt to each tied
+        winner — tile *recomputation* instead of keeping the forward
+        activations resident, so the device budget holds for backward
+        too.  Traffic lands in `stats.bwd_*`."""
+        tex = self.transposed()
+        tex.reset_stats()
+        gn = (np.asarray(g, np.float32)
+              / np.maximum(np.asarray(cnt, np.float32), 1.0))
+        yg = np.ascontiguousarray(
+            np.concatenate([np.asarray(y, np.float32), gn], axis=1))
+        gx = tex._sweep_max_backward(
+            np.ascontiguousarray(np.asarray(x, np.float32)), yg)
+        self.stats.add_backward(tex.stats)
+        return gx
+
+    def _sweep_max_backward(self, x: np.ndarray,
+                            yg: np.ndarray) -> np.ndarray:
+        """Runs on the TRANSPOSED executor: accumulate gx per source
+        interval (this store's rows), streaming the (y, g/cnt)
+        destination-interval stacks through the tile chunks exactly as
+        the forward streams x (same `_stage_chunk`, same S-shape)."""
+        st = self.store
+        t, q = st.tile, st.q
+        d = yg.shape[1] // 2
+        chunk = self.effective_chunk(2 * d)
+        gx = np.zeros((st.padded_vertices, d), np.float32)
+        steps: List[Tuple[int, np.ndarray]] = []
+        for i in range(q):
+            for c in chunk_tile_row(st.row_tiles(i), chunk,
+                                    snake=(i % 2 == 1)):
+                steps.append((i, c))
+        if not steps:
+            return gx[:st.num_vertices]
+        self._xcache = OrderedDict()
+
+        def flush(i, acc):
+            h = np.asarray(acc)
+            self.stats.d2h_bytes += h.nbytes
+            gx[i * t:(i + 1) * t] = h
+
+        staged = self._stage_chunk(steps[0][1], yg, None, chunk)
+        acc = None
+        xv = None
+        cur_row: Optional[int] = None
+        for s, (i, idx) in enumerate(steps):
+            payload, ygs_dev = staged
+            if i != cur_row:
+                if cur_row is not None:
+                    flush(cur_row, acc)
+                acc = jnp.zeros((t, d), jnp.float32)
+                hb = self._interval(x, i)
+                self.stats.h2d_x_bytes += hb.nbytes
+                self.stats.x_loads += 1
+                xv = jax.device_put(hb)
+                cur_row = i
+            if self.double_buffer and s + 1 < len(steps):
+                staged = self._stage_chunk(steps[s + 1][1], yg, None,
+                                           chunk)
+            if self.tile_format == "packed":
+                rows, cols, vals = payload
+                acc = _chunk_maxbwd_packed(acc, xv, rows, cols, vals,
+                                           ygs_dev)
+            else:
+                acc = _chunk_maxbwd_dense(acc, xv, payload, ygs_dev)
+            self.stats.steps += 1
+            if not self.double_buffer and s + 1 < len(steps):
+                jax.block_until_ready(acc)
+                staged = self._stage_chunk(steps[s + 1][1], yg, None,
+                                           chunk)
+        flush(cur_row, acc)
+        return gx[:st.num_vertices]
+
     def _tile_part(self, blk_dev, x_dev, op: str):
         if self.tile_format == "packed":
             from repro.kernels.rer_gather import ops as gather_ops
@@ -562,6 +855,104 @@ class TiledExecutor:
         if op == "sum":
             return _tile_part_sum(blk_dev, x_dev)
         return _tile_part_max(blk_dev, x_dev)
+
+
+# ----------------------------------------------------------------------
+# Differentiable wrapper: the streamed aggregate inside jit/grad (C9)
+# ----------------------------------------------------------------------
+
+def make_streamed_aggregate(ex: TiledExecutor, op: str) -> Callable:
+    """A jax-traceable, reverse-differentiable view of the streamed
+    aggregate (DESIGN.md C9) — what makes the out-of-core backend
+    *trainable*.  The host streaming loop runs inside
+    `jax.pure_callback`, so it composes with jit/vjp while the graph
+    stays host-resident; `jax.custom_vjp` supplies the reverse rule the
+    callback lacks:
+
+      * sum:  gx = A^T g — the cotangent re-streams the TRANSPOSED
+        tile store (`TiledExecutor.transposed()`, a zero-copy src<->dst
+        swap of the same host tiles); no residuals at all;
+      * mean: streamed sum + a traced divide by in-counts (the
+        divide's VJP is XLA's, the sum's is ours);
+      * max:  forward captures (y, tie counts); backward re-streams
+        transposed tiles, recomputes each edge product against y, and
+        scatters g/count to every tied winner — the same even-split
+        convention as jax's segment_max gradient.
+
+    Results are cached per (executor, op) so repeated traces reuse one
+    custom_vjp callable.  Gradients flow only to x (the adjacency is a
+    constant of the graph)."""
+    if op not in ("sum", "max", "mean"):
+        raise ValueError(op)
+    fn = ex._diff_cache.get(op)
+    if fn is not None:
+        return fn
+    n = ex.store.num_vertices
+
+    def _shape(a):
+        return jax.ShapeDtypeStruct((n, a.shape[1]), jnp.float32)
+
+    def _np(a):
+        return np.ascontiguousarray(np.asarray(a, np.float32))
+
+    def _host_sum_fwd(xh):
+        return ex.aggregate(_np(xh), "sum", order="column")
+
+    def _host_sum_bwd(gh):
+        tex = ex.transposed()
+        tex.reset_stats()
+        gx = tex.aggregate(_np(gh), "sum", order="column")
+        ex.stats.add_backward(tex.stats)
+        return gx
+
+    if op in ("sum", "mean"):
+        @jax.custom_vjp
+        def agg_sum(x):
+            return jax.pure_callback(_host_sum_fwd, _shape(x), x)
+
+        agg_sum.defvjp(
+            lambda x: (agg_sum(x), None),
+            lambda _, g: (jax.pure_callback(_host_sum_bwd, _shape(g),
+                                            g),))
+        if op == "sum":
+            fn = agg_sum
+        else:
+            counts = jnp.asarray(
+                np.maximum(ex.store.in_counts, 1.0))[:, None]
+
+            def fn(x):
+                return agg_sum(x) / counts
+    else:
+        def _host_max_fwd(xh):
+            return ex.aggregate_max_forward(_np(xh))
+
+        def _host_max_bwd(xh, yh, ch, gh):
+            return ex.max_vjp(_np(xh), _np(yh), _np(ch), _np(gh))
+
+        @jax.custom_vjp
+        def agg_max(x):
+            # primal (non-differentiated jitted forward): plain streamed
+            # max — the tie counts are only captured in agg_max_fwd,
+            # where a backward pass will actually consume them
+            return jax.pure_callback(
+                lambda xh: ex.aggregate(_np(xh), "max", order="column"),
+                _shape(x), x)
+
+        def agg_max_fwd(x):
+            y, cnt = jax.pure_callback(_host_max_fwd,
+                                       (_shape(x), _shape(x)), x)
+            return y, (x, y, cnt)
+
+        def agg_max_bwd(res, g):
+            x, y, cnt = res
+            gx = jax.pure_callback(_host_max_bwd, _shape(g), x, y, cnt,
+                                   g)
+            return (gx,)
+
+        agg_max.defvjp(agg_max_fwd, agg_max_bwd)
+        fn = agg_max
+    ex._diff_cache[op] = fn
+    return fn
 
 
 @jax.jit

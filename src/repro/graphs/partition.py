@@ -159,6 +159,53 @@ class EdgeTileStore:
         return out
 
 
+def _out_counts(num_vertices: int, tile: int, block_col: np.ndarray,
+                entry_ptr: np.ndarray, col_local: np.ndarray) -> np.ndarray:
+    """Per-vertex OUT-degree recovered from a tile store's per-tile
+    entry lists (the transposed store's `in_counts`)."""
+    counts = np.diff(entry_ptr)
+    tile_of = np.repeat(np.arange(block_col.shape[0], dtype=np.int64),
+                        counts)
+    gsrc = block_col[tile_of].astype(np.int64) * tile + col_local
+    return np.bincount(gsrc[gsrc < num_vertices],
+                       minlength=num_vertices).astype(np.float32)
+
+
+def transpose_tile_store(store: EdgeTileStore) -> EdgeTileStore:
+    """The A^T view of a tile store, sharing every edge array (zero
+    copy): destination and source roles swap — `block_row` <->
+    `block_col`, `edge_li` <-> `edge_lj` — and the row/column tile
+    indexes swap with them, so the transposed store's column-major
+    sweep walks exactly the original tiles in src-major order.  This is
+    the backward pass of the streamed executor (DESIGN.md C9): the
+    cotangent re-streams the *same* host tiles transposed instead of
+    keeping forward activations resident.  `in_counts` becomes the
+    out-degree (the only field that needs an O(E) recompute)."""
+    return EdgeTileStore(
+        store.num_vertices, store.tile, store.q,
+        store.block_col, store.block_row, store.edge_ptr,
+        store.edge_lj, store.edge_li, store.edge_w,
+        _out_counts(store.num_vertices, store.tile, store.block_col,
+                    store.edge_ptr, store.edge_lj),
+        store._col_ptr, store._col_order, store._row_ptr,
+        store._row_order)
+
+
+def transpose_packed_store(ps: PackedTileStore) -> PackedTileStore:
+    """The A^T view of a packed store (zero copy, same tile indexing as
+    `transpose_tile_store` so one executor can carry both forms).
+    Entries keep their per-tile grouping with `row_local`/`col_local`
+    swapped; the CSR-within-tile order becomes CSC order, which every
+    packed consumer tolerates (gather + segment reductions are
+    insensitive to entry order)."""
+    return PackedTileStore(
+        ps.num_vertices, ps.tile, ps.q,
+        ps.block_col, ps.block_row, ps.entry_ptr,
+        ps.col_local, ps.row_local, ps.val,
+        _out_counts(ps.num_vertices, ps.tile, ps.block_col,
+                    ps.entry_ptr, ps.col_local))
+
+
 def pow2_bucket(n: int, floor: int = 8) -> int:
     """Smallest power of two >= max(n, floor) — the nnz bucket a packed
     tile is padded to, so jitted consumers see a log-bounded shape set."""

@@ -97,17 +97,19 @@ def build_gnn(*, model: str, dataset: str, backend: str, steps: int,
     2-layer EnGN stack on any aggregation backend — the GNN counterpart
     of `build`.  `backend="ring"` trains on the sharded ring-tiled mesh
     (gradients flow through the ppermute rotation: the ring schedule is
-    a scan, so reverse-mode AD works across shards); a
-    `device_budget_bytes` per-shard budget composes with it exactly as
-    in inference (spill to the streamed executor)."""
+    a scan, so reverse-mode AD works across shards).  A
+    `device_budget_bytes` budget composes exactly as in inference:
+    graphs whose training footprint (activations + cotangents) exceeds
+    it spill to the streamed out-of-core "tiled" backend, which trains
+    through its custom_vjp reverse path — the backward pass re-streams
+    the same host tiles transposed (DESIGN.md C9), so the largest
+    graphs are trainable under the same budget that serves them."""
     from repro.core.engn import prepare_graph
     from repro.core.models import apply_stack, init_stack, make_gnn_stack
     from repro.data.pipeline import GraphNodeStream
     from repro.graphs.generate import make_dataset, random_features
-    from repro.training.optimizer import (AdamWConfig, adamw_update,
-                                          clip_by_global_norm,
-                                          init_opt_state)
-    from repro.training.schedule import cosine_schedule
+    from repro.training.optimizer import init_opt_state
+    from repro.training.train_lib import make_gnn_train_step
 
     g, f, classes = make_dataset(dataset, max_vertices=max_vertices,
                                  max_edges=max_edges)
@@ -125,35 +127,25 @@ def build_gnn(*, model: str, dataset: str, backend: str, steps: int,
     for layer in layers:
         layer.cfg.ring_shards = ring_shards
         layer.cfg.device_budget_bytes = device_budget_bytes
+        # price the budget gate for forward AND backward buffers, and
+        # pre-size the streamed executor for the backward sweeps (C9)
+        layer.cfg.training = True
     params = init_stack(layers, jax.random.key(seed))
     gd = prepare_graph(gn, layers[0].cfg, out_dim=hidden)
-    opt_cfg = AdamWConfig(weight_decay=0.01)
 
-    def loss_fn(ps, nodes, labels):
+    def loss_fn(ps, batch):
+        nodes = jnp.asarray(batch["nodes"])
+        labels = y_true[nodes]
         logits = apply_stack(layers, ps, gd, x)[nodes]
         ll = jax.nn.log_softmax(logits, -1)
         return -jnp.mean(jnp.take_along_axis(ll, labels[:, None], 1))
 
-    if gd.get("backend") == "tiled":
-        # the streamed executor is a host loop with no reverse-mode
-        # path: fail at build time, not deep inside the first grad trace
-        raise NotImplementedError(
-            "training cannot stream through the tiled executor (host "
-            "loop, no reverse-mode AD); raise the per-shard "
-            "device_budget_bytes, add ring shards to shrink the "
-            "per-device stripe, or train with backend='segment'")
-
-    def train_step(ps, opt, batch):
-        nodes = jnp.asarray(batch["nodes"])
-        labels = y_true[nodes]
-        loss, grads = jax.value_and_grad(loss_fn)(ps, nodes, labels)
-        grads, _ = clip_by_global_norm(grads, opt_cfg.clip_norm)
-        lr = cosine_schedule(opt["count"] + 1, peak_lr=peak_lr,
-                             warmup=min(20, steps), total=steps)
-        ps, opt = adamw_update(opt_cfg, grads, opt, ps, lr)
-        return ps, opt, {"loss": loss, "lr": lr}
-
-    step = jax.jit(train_step)
+    # a budget spill to gd["backend"] == "tiled" trains too: the
+    # streamed aggregate carries a custom_vjp whose backward re-streams
+    # the transposed tile store, so the jitted step differentiates
+    # through the out-of-core path (DESIGN.md C9)
+    step = make_gnn_train_step(loss_fn, peak_lr=peak_lr,
+                               warmup=min(20, steps), total_steps=steps)
     data = GraphNodeStream(g.num_vertices, classes, batch=batch, seed=1)
     state = {"params": params, "opt": init_opt_state(params)}
     aux = {"layers": layers, "graph": gd, "x": x, "y_true": y_true,
@@ -163,7 +155,9 @@ def build_gnn(*, model: str, dataset: str, backend: str, steps: int,
 
 def run_gnn(args) -> None:
     """--gnn entry point: fault-tolerant GNN training on the chosen
-    aggregation backend (ring = the sharded ring-tiled device mesh)."""
+    aggregation backend (ring = the sharded ring-tiled device mesh;
+    graphs over --device-budget train through the streamed out-of-core
+    executor automatically — C9)."""
     import tempfile
     step, state, data, gd, aux = build_gnn(
         model=args.gnn, dataset=args.dataset, backend=args.gnn_backend,

@@ -254,13 +254,20 @@ class GNNServingEngine:
         """Device bytes the dense segment path would need for this
         subgraph, at the widest layer of the stack — priced at the
         pow2-bucketed shapes the bucketed path actually allocates, so
-        padding cannot overshoot the budget undetected."""
+        padding cannot overshoot the budget undetected.  Serving is
+        inference-only, so the gate prices forward buffers alone
+        (training=False): a training-capable plan would carry the
+        cotangent twins and the transposed-store backward streams
+        (DESIGN.md C9), which `prepare_graph` prices when
+        `EnGNConfig.training` is set — the per-batch executors built
+        here never grow a transposed view."""
         n, e = g.num_vertices, g.num_edges
         if self._can_bucket:
             n = max(_next_pow2(n + 1), 256)
             e = max(_next_pow2(max(e, 1)), 1024)
         return max(dense_footprint_bytes(
-            n, e, layer.cfg.in_dim, layer.cfg.out_dim, "segment")
+            n, e, layer.cfg.in_dim, layer.cfg.out_dim, "segment",
+            training=False)
             for layer in self.layers)
 
     def _try_ring_plan(self, g: COOGraph):

@@ -64,6 +64,18 @@ class strategies:  # mirrors `from hypothesis import strategies as st`
 st = strategies
 
 
+def _seed_for(fn) -> int:
+    """Deterministic per-test RNG seed, derived from the fully
+    qualified test name (module + qualname): every test gets its own
+    stream, re-created at call time — no module-level RNG state to
+    share or advance — so runs are reproducible across pytest workers
+    and processes, and same-named tests in different files draw
+    *different* examples.  crc32, not hash(): str hashing is
+    randomized per process (PYTHONHASHSEED) and would break example
+    reproducibility."""
+    return zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+
+
 def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
     """Records max_examples on the wrapped function (deadline etc. are
     accepted and ignored)."""
@@ -85,10 +97,7 @@ def given(*strategies_pos, **strategies_kw):
                         _DEFAULT_MAX_EXAMPLES)
             # cap: the fallback has no shrinker, keep CI time bounded
             n = min(n, 25)
-            # crc32, not hash(): str hashing is randomized per process
-            # (PYTHONHASHSEED) and would break example reproducibility
-            rng = np.random.default_rng(
-                zlib.crc32(fn.__qualname__.encode()))
+            rng = np.random.default_rng(_seed_for(fn))
             for i in range(n):
                 ex_pos = [s.example(rng) for s in strategies_pos]
                 ex_kw = {k: s.example(rng)

@@ -56,11 +56,18 @@ def test_launcher_gnn_mode_trains_on_ring_backend():
                                rtol=1e-3, atol=1e-4)
 
 
-def test_launcher_gnn_mode_budget_spill_fails_loudly():
-    """A per-shard budget too small for the ring stripe would spill to
-    the streamed tiled executor, which has no reverse-mode path — the
-    build must say so up front (inference spills; training refuses),
-    not die mid-trace on the first grad."""
-    with pytest.raises(NotImplementedError, match="ring shards"):
-        _gnn_losses("ring", steps=3, ring_shards=1,
-                    device_budget_bytes=50_000)
+def test_launcher_gnn_mode_budget_spill_trains_streamed():
+    """A per-shard budget too small for the ring stripe spills to the
+    streamed tiled executor — which now trains (C9: the streamed
+    aggregate carries a custom_vjp whose backward re-streams the
+    transposed tile store), following the segment trajectory instead
+    of refusing at build time."""
+    seg_losses, _ = _gnn_losses("segment", steps=3)
+    spill_losses, gd = _gnn_losses("ring", steps=3, ring_shards=1,
+                                   device_budget_bytes=50_000)
+    assert gd.get("backend") == "tiled"
+    assert gd["tiled_meta"]["trainable"] is True
+    assert all(np.isfinite(spill_losses))
+    np.testing.assert_allclose(spill_losses, seg_losses,
+                               rtol=1e-3, atol=1e-4)
+    assert gd["tiled_exec"].stats.bwd_tiles > 0

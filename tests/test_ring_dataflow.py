@@ -5,8 +5,9 @@ A >1-device ring needs >1 device; a plain checkout exposes one CPU.
 Multi-device coverage comes twice: the subprocess checks force
 XLA_FLAGS=--xla_force_host_platform_device_count=8 before jax imports
 (so the main test process keeps its single-device view), and the CI
-`multi-device` job runs this whole file under a forced 8-device mesh,
-which activates the in-process property test across all 8 shards.
+`multi-device` job runs this whole file under a forced 8-device mesh.
+(The random-draw ring-vs-segment parity property lives in
+tests/test_backend_matrix.py with the other backends' parity sweeps.)
 """
 import os
 import subprocess
@@ -17,11 +18,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:                     # clean checkout: vendored fallback
-    from _hypothesis_fallback import given, settings, st
 
 from repro.core.dataflow import (build_ring_tile_shards,
                                  make_ring_tiled_aggregate,
@@ -195,29 +191,9 @@ def _ring_tiled(g, x, op, shards, tile):
     return np.asarray(y)[:g.num_vertices]
 
 
-@settings(max_examples=12, deadline=None)
-@given(n=st.integers(9, 140), e=st.integers(1, 700),
-       seed=st.integers(0, 5), tile=st.integers(3, 18),
-       op=st.sampled_from(["sum", "max", "mean"]))
-def test_ring_tiled_matches_segment_property(n, e, seed, tile, op):
-    """The acceptance property (ISSUE 3): sharded ring-tiled aggregation
-    equals the segment reference to fp32 tolerance for sum/max/mean on
-    whatever mesh is available — the CI multi-device job runs this file
-    under XLA_FLAGS=--xla_force_host_platform_device_count=8, so there
-    the full 8-way ring (with uneven vertex shards: n is drawn freely)
-    is exercised on every PR."""
-    shards = min(len(jax.devices()), 8)
-    g = _int_graph(n, e, seed)
-    rng = np.random.default_rng(seed + 17)
-    x = rng.integers(-3, 4, (n, 6)).astype(np.float32)
-    got = _ring_tiled(g, x, op, shards, tile)
-    want = _segment_ref(g, x, op)
-    if op == "mean":
-        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
-    else:
-        assert np.array_equal(got, want), (op, shards, tile)
-
-
+# (the random-draw ring-vs-segment parity property moved to
+# tests/test_backend_matrix.py::test_property_ring_matches_segment,
+# which sweeps both stripe formats from shared fixtures)
 def test_ring_tiled_one_shard_degenerates_to_blocked_bitwise():
     """A 1-device ring is exactly the blocked RER-SpMM path: same tile
     grid, same per-tile contraction, same segment reduce — outputs must

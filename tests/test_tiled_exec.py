@@ -54,25 +54,9 @@ def _segment_ref(g, x, op):
 
 
 # ---------------------------------------------------- tile boundaries
-@settings(max_examples=20, deadline=None)
-@given(n=st.integers(4, 120), e=st.integers(1, 600),
-       seed=st.integers(0, 6), tile=st.integers(5, 33),
-       op=st.sampled_from(["sum", "max", "mean"]),
-       order=st.sampled_from(["column", "row"]),
-       loops=st.booleans())
-def test_tiled_matches_segment_bitwise(n, e, seed, tile, op, order, loops):
-    """Uneven Q splits (tile does not divide N), empty tiles (sparse
-    R-MAT rows), self-loop-heavy graphs: streamed aggregation equals
-    segment_aggregate bit-for-bit for sum/max/mean."""
-    g = _int_graph(n, e, seed, self_loop_heavy=loops)
-    x = _int_features(n, 7, seed)
-    ex = TiledExecutor(g, tile=tile, chunk=3)
-    got = ex.aggregate(x, op, order=order)
-    want = _segment_ref(g, x, op)
-    assert got.shape == want.shape
-    assert np.array_equal(got, want), (op, order, tile)
-
-
+# (the generic streamed-vs-segment parity property moved to
+# tests/test_backend_matrix.py, which sweeps every backend x format x
+# op x graph shape from one set of shared fixtures)
 @settings(max_examples=6, deadline=None)
 @given(n=st.integers(8, 60), e=st.integers(1, 300), seed=st.integers(0, 4),
        op=st.sampled_from(["sum", "max"]),
