@@ -227,3 +227,42 @@ def run():
          round(agg_us["dense"] / max(agg_us["packed"], 1.0), 3),
          f"dense_block={agg_us['dense']:.0f}us "
          f"packed={agg_us['packed']:.0f}us (>= 1.5 is the ISSUE-4 gate)")
+
+    # staged-model train-step rows (C10): the relation-typed and gated
+    # contracts fwd+bwd through the streamed VJP under a budget that
+    # rejects every dense path — the models that used to be fenced off
+    # the out-of-core executor, priced on the same edges/s scale as
+    # the GCN train row above.  Fixed size for the same reason as the
+    # gate section.
+    import dataclasses
+    n_s, e_s, f_s, rels = 4000, 18000, 32, 3
+    gs = rmat_graph(n_s, e_s, seed=11)
+    rel = ((gs.src.astype(np.int64) + gs.dst) % rels).astype(np.int32)
+    gs = dataclasses.replace(gs, rel=rel, num_relations=rels)
+    xs = jnp.asarray(random_features(n_s, f_s, seed=4))
+    coef_s = jnp.asarray(random_features(n_s, HIDDEN, seed=5))
+    for model, extra in (("rgcn", {"num_relations": rels}),
+                         ("gated_gcn", {})):
+        lay = make_gnn(model, f_s, HIDDEN, backend="tiled", tile=256,
+                       **extra)
+        lay.cfg.device_budget_bytes = 600_000
+        lay.cfg.training = True
+        gms = prepare_graph(gs, lay.cfg)
+        assert gms["backend"] == "tiled", gms["backend"]
+        ps = lay.init(jax.random.key(9))
+
+        def staged_loss(p, xx, _l=lay, _g=gms):
+            return jnp.sum(_l.apply(p, _g, xx) * coef_s)
+
+        step = jax.jit(jax.value_and_grad(staged_loss, argnums=(0, 1)))
+        ex_s = gms["tiled_exec"]
+        ex_s.reset_stats()
+        t_us = _median_us(step, ps, xs, iters=3)
+        st = ex_s.stats
+        emit(f"tiled/staged/{model}_train_us", round(t_us, 1),
+             f"fmt={gms['tiled_meta']['tile_format']} "
+             f"bwd_h2d_mb={(st.bwd_h2d_tile_bytes + st.bwd_h2d_x_bytes) / 1e6:.1f} "
+             f"bwd_d2h_mb={st.bwd_d2h_bytes / 1e6:.1f}")
+        emit(f"tiled/staged/{model}_train_edges_per_s",
+             round(gs.num_edges / (t_us / 1e6), 1),
+             f"streamed fwd+bwd, E={gs.num_edges} R={rels}")

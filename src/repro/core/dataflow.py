@@ -243,6 +243,11 @@ class RingTileShards:
     tile_row: np.ndarray        # (P, P, s_max) int32, local dst interval
     tile_col: np.ndarray        # (P, P, s_max) int32, local src interval
     in_counts: np.ndarray       # (P, n_loc) float32 in-edge counts
+    # relation-typed stripes (DESIGN.md C10): every entry of a tile
+    # shares its tile's relation id, so one (P, P, s_max) column covers
+    # the whole stripe; None on untyped graphs
+    tile_rel: Optional[np.ndarray] = None    # (P, P, s_max) int32
+    num_relations: int = 1
 
     @property
     def padded_vertices(self) -> int:
@@ -254,9 +259,10 @@ class RingTileShards:
         `ring_feature_bytes` — they depend on the layer dims)."""
         p = self.num_shards
         per_dev_tiles = p * self.s_max
+        rel = 4 * per_dev_tiles if self.tile_rel is not None else 0
         return int(4 * per_dev_tiles * self.tile * self.tile
                    + 2 * 4 * per_dev_tiles
-                   + 4 * self.n_loc)
+                   + 4 * self.n_loc + rel)
 
     def stats(self, feat_dim: int, out_dim: Optional[int] = None) -> RingStats:
         p = self.num_shards
@@ -367,6 +373,8 @@ def build_ring_tile_shards(g: COOGraph, num_shards: int,
     blocks = np.zeros((p, p, s_max, t, t), np.float32)
     tile_row = np.zeros((p, p, s_max), np.int32)
     tile_col = np.zeros((p, p, s_max), np.int32)
+    tile_rel = (np.zeros((p, p, s_max), np.int32)
+                if store.block_rel is not None else None)
     if order.size:
         buf = np.zeros((order.size, t, t), np.float32)
         store.densify(order, buf)
@@ -374,12 +382,15 @@ def build_ring_tile_shards(g: COOGraph, num_shards: int,
         blocks[di, si, slot] = buf
         tile_row[di, si, slot] = (store.block_row[order] % q_loc)
         tile_col[di, si, slot] = (store.block_col[order] % q_loc)
+        if tile_rel is not None:
+            tile_rel[di, si, slot] = store.block_rel[order]
 
     return RingTileShards(
         num_shards=p, tile=t, q_loc=q_loc, n_loc=n_loc, s_max=s_max,
         nnzb=int(store.nnzb), num_vertices=n,
         blocks=blocks, tile_row=tile_row, tile_col=tile_col,
-        in_counts=store.in_counts.reshape(p, n_loc).astype(np.float32))
+        in_counts=store.in_counts.reshape(p, n_loc).astype(np.float32),
+        tile_rel=tile_rel, num_relations=store.num_relations)
 
 
 # ----------------------------------------------------------------------
@@ -410,6 +421,12 @@ class PackedRingShards:
     q_loc: int = 1
     s_max: int = 0              # = l_max (meta compat with the dense plan)
     nnzb: int = 0               # = nnz  (meta compat with the dense plan)
+    # relation-typed stripes (DESIGN.md C10): per-entry relation id (the
+    # packed carrier has no tile grouping to hang a shared id off);
+    # None on untyped graphs.  Typed graphs merge multi-edges per
+    # (dst, src, rel) so distinct relations never collapse.
+    rels: Optional[np.ndarray] = None        # (P, P, L) int32
+    num_relations: int = 1
 
     @property
     def padded_vertices(self) -> int:
@@ -417,8 +434,11 @@ class PackedRingShards:
 
     def device_bytes(self) -> int:
         """Device-resident bytes per shard: the packed stripe (12 B per
-        entry slot across the P source pairs) + the in-count shard."""
-        return int(12 * self.num_shards * self.l_max + 4 * self.n_loc)
+        entry slot across the P source pairs, +4 B with a rel column) +
+        the in-count shard."""
+        per_slot = 16 if self.rels is not None else 12
+        return int(per_slot * self.num_shards * self.l_max
+                   + 4 * self.n_loc)
 
     def stats(self, feat_dim: int, out_dim: Optional[int] = None) -> RingStats:
         p = self.num_shards
@@ -441,11 +461,20 @@ class PackedRingShards:
 def _merge_edges(g: COOGraph, n_pad: int):
     """Merge multi-edges by summation over the padded vertex space —
     the same coefficients the dense tiles' scatter-add produces
-    (`graphs.partition.merge_by_key` is the shared merge core)."""
-    ku, val = merge_by_key(g.dst.astype(np.int64) * n_pad + g.src,
-                           g.weights())
-    return (ku // n_pad).astype(np.int64), (ku % n_pad).astype(np.int64), \
-        val
+    (`graphs.partition.merge_by_key` is the shared merge core).
+    Relation-typed graphs merge per (dst, src, rel), exactly like the
+    rel-split tile stores, so typed packed and dense stripes carry the
+    same coefficients.  Returns (dst, src, val, rel-or-None)."""
+    typed = g.rel is not None and g.num_relations > 1
+    r = int(g.num_relations) if typed else 1
+    key = (g.dst.astype(np.int64) * n_pad + g.src) * r
+    if typed:
+        key = key + g.rel.astype(np.int64)
+    ku, val = merge_by_key(key, g.weights())
+    cell = ku // r
+    rel = (ku % r).astype(np.int32) if typed else None
+    return (cell // n_pad).astype(np.int64), \
+        (cell % n_pad).astype(np.int64), val, rel
 
 
 def build_packed_ring_shards(g: COOGraph, num_shards: int,
@@ -459,7 +488,7 @@ def build_packed_ring_shards(g: COOGraph, num_shards: int,
     n = g.num_vertices
     n_loc = -(-n // p)
     n_pad = p * n_loc
-    dst, src, val = _merge_edges(g, n_pad)
+    dst, src, val, rel = _merge_edges(g, n_pad)
     d_of = dst // n_loc
     s_of = src // n_loc
     pair = d_of * p + s_of
@@ -474,17 +503,21 @@ def build_packed_ring_shards(g: COOGraph, num_shards: int,
     rows = np.zeros((p, p, l_max), np.int32)
     cols = np.zeros((p, p, l_max), np.int32)
     vals = np.zeros((p, p, l_max), np.float32)
+    rels = np.zeros((p, p, l_max), np.int32) if rel is not None else None
     if order.size:
         di, si = d_of[order], s_of[order]
         rows[di, si, slot] = (dst[order] % n_loc)
         cols[di, si, slot] = (src[order] % n_loc)
         vals[di, si, slot] = val[order]
+        if rels is not None:
+            rels[di, si, slot] = rel[order]
     in_counts = np.bincount(g.dst, minlength=n_pad).astype(np.float32)
     return PackedRingShards(
         num_shards=p, n_loc=n_loc, l_max=l_max, nnz=int(dst.size),
         num_vertices=n, rows=rows, cols=cols, vals=vals,
         in_counts=in_counts.reshape(p, n_loc),
-        s_max=l_max, nnzb=int(dst.size))
+        s_max=l_max, nnzb=int(dst.size),
+        rels=rels, num_relations=int(g.num_relations))
 
 
 def _ring_packed_shard(rows, cols, vals, x_shard, counts, *,
@@ -643,4 +676,236 @@ def make_ring_tiled_aggregate(mesh: Mesh, axis: str, op: str,
         inner, mesh=mesh,
         in_specs=(P(axis, None, None, None, None), P(axis, None, None),
                   P(axis, None, None), P(axis, None), P(axis, None)),
+        out_specs=P(axis, None))
+
+
+# ----------------------------------------------------------------------
+# Staged-contract ring bodies (DESIGN.md C10): relation-typed sums and
+# dst+src gated messages ride the same rotation — typed stripes carry a
+# rel per tile/entry selecting its slice of the rotating (N, R*H)
+# payload; the gate keeps ph resident on the destination shard while
+# (pc || x) rotates.  All bodies are lax.scan over the P hops, so
+# jax.grad differentiates straight through the ring (no custom VJP).
+# ----------------------------------------------------------------------
+
+def _ring_typed_tiled_shard(blocks, tile_row, tile_col, tile_rel,
+                            x_shard, counts, *, axis_name: str,
+                            q_loc: int, tile: int, num_shards: int,
+                            num_relations: int):
+    """Typed sum: x_shard is the rotating (n_loc, R*H) stacked payload;
+    each tile contracts the H-wide slice of its own relation."""
+    p, r = num_shards, num_relations
+    me = jax.lax.axis_index(axis_name)
+    h = x_shard.shape[1] // r
+    init_acc = _pvary(jnp.zeros((q_loc, tile, h), jnp.float32),
+                      axis_name)
+
+    def step(carry, k):
+        x_rot, acc = carry
+        s = jax.lax.rem(me + k, p)
+        blk = jax.lax.dynamic_index_in_dim(blocks, s, 0, keepdims=False)
+        trow = jax.lax.dynamic_index_in_dim(tile_row, s, 0,
+                                            keepdims=False)
+        tcol = jax.lax.dynamic_index_in_dim(tile_col, s, 0,
+                                            keepdims=False)
+        trel = jax.lax.dynamic_index_in_dim(tile_rel, s, 0,
+                                            keepdims=False)
+        x_next = jax.lax.ppermute(x_rot, axis_name, _ring_step_perm(p))
+        xs = jnp.take(x_rot.reshape(q_loc, tile, r * h), tcol, axis=0)
+        sel = jnp.take_along_axis(
+            xs.reshape(-1, tile, r, h),
+            trel[:, None, None, None], axis=2)[:, :, 0, :]
+        part = jnp.einsum("ktu,kuf->ktf", blk, sel,
+                          preferred_element_type=jnp.float32)
+        acc = acc + jax.ops.segment_sum(part, trow, num_segments=q_loc)
+        return (x_next, acc), None
+
+    (_, acc), _ = jax.lax.scan(step, (x_shard, init_acc),
+                               jnp.arange(p, dtype=jnp.int32))
+    return acc.reshape(q_loc * tile, h)
+
+
+def make_ring_typed_sum_tiled(mesh: Mesh, axis: str, q_loc: int,
+                              tile: int, num_relations: int) -> Callable:
+    """shard_map wrapper over `_ring_typed_tiled_shard`:
+
+        (blocks, tile_row, tile_col, tile_rel, X_payload, in_counts)
+            -> sum_r A_r X[:, rH:(r+1)H]
+
+    with X_payload (P * n_loc, R*H) row-sharded over `axis`."""
+    p = int(mesh.shape[axis])
+    body = partial(_ring_typed_tiled_shard, axis_name=axis, q_loc=q_loc,
+                   tile=tile, num_shards=p, num_relations=num_relations)
+
+    def inner(blocks, tile_row, tile_col, tile_rel, x, counts):
+        return body(blocks[0], tile_row[0], tile_col[0], tile_rel[0],
+                    x, counts[0])
+
+    return shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(axis, None, None, None, None), P(axis, None, None),
+                  P(axis, None, None), P(axis, None, None),
+                  P(axis, None), P(axis, None)),
+        out_specs=P(axis, None))
+
+
+def _ring_typed_packed_shard(rows, cols, vals, rels, x_shard, counts, *,
+                             axis_name: str, n_loc: int,
+                             num_shards: int, num_relations: int):
+    """Typed sum on packed stripes: per-entry rel selects the slice of
+    the gathered (L, R*H) payload rows."""
+    p, r = num_shards, num_relations
+    me = jax.lax.axis_index(axis_name)
+    h = x_shard.shape[1] // r
+    init_acc = _pvary(jnp.zeros((n_loc, h), jnp.float32), axis_name)
+
+    def step(carry, k):
+        x_rot, acc = carry
+        s = jax.lax.rem(me + k, p)
+        rw = jax.lax.dynamic_index_in_dim(rows, s, 0, keepdims=False)
+        c = jax.lax.dynamic_index_in_dim(cols, s, 0, keepdims=False)
+        v = jax.lax.dynamic_index_in_dim(vals, s, 0, keepdims=False)
+        re = jax.lax.dynamic_index_in_dim(rels, s, 0, keepdims=False)
+        x_next = jax.lax.ppermute(x_rot, axis_name, _ring_step_perm(p))
+        gathered = jnp.take(x_rot, c, axis=0)          # (L, R*H)
+        sel = jnp.take_along_axis(gathered.reshape(-1, r, h),
+                                  re[:, None, None], axis=1)[:, 0, :]
+        acc = acc + jax.ops.segment_sum(v[:, None] * sel, rw,
+                                        num_segments=n_loc)
+        return (x_next, acc), None
+
+    (_, acc), _ = jax.lax.scan(step, (x_shard, init_acc),
+                               jnp.arange(p, dtype=jnp.int32))
+    return acc
+
+
+def make_ring_typed_sum_packed(mesh: Mesh, axis: str, n_loc: int,
+                               num_relations: int) -> Callable:
+    """shard_map wrapper over `_ring_typed_packed_shard`:
+
+        (rows, cols, vals, rels, X_payload, in_counts)
+            -> sum_r A_r X[:, rH:(r+1)H]"""
+    p = int(mesh.shape[axis])
+    body = partial(_ring_typed_packed_shard, axis_name=axis,
+                   n_loc=n_loc, num_shards=p,
+                   num_relations=num_relations)
+
+    def inner(rows, cols, vals, rels, x, counts):
+        return body(rows[0], cols[0], vals[0], rels[0], x, counts[0])
+
+    return shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None, None),
+                  P(axis, None, None), P(axis, None, None),
+                  P(axis, None), P(axis, None)),
+        out_specs=P(axis, None))
+
+
+def _ring_gated_tiled_shard(blocks, tile_row, tile_col, ph_shard,
+                            pcx_shard, counts, *, axis_name: str,
+                            q_loc: int, tile: int, num_shards: int):
+    """Gated sum: message = val * sigmoid(ph[dst] + pc[src]) * x[src].
+    ph stays resident on the destination shard; the (pc || x) stack
+    rotates.  val == 0 slots (structural zeros and tile padding) are
+    masked out — the shared no-edge convention."""
+    p = num_shards
+    me = jax.lax.axis_index(axis_name)
+    f = pcx_shard.shape[1] // 2
+    ph_t = ph_shard.reshape(q_loc, tile, f)
+    init_acc = _pvary(jnp.zeros((q_loc, tile, f), jnp.float32),
+                      axis_name)
+
+    def step(carry, k):
+        x_rot, acc = carry
+        s = jax.lax.rem(me + k, p)
+        blk = jax.lax.dynamic_index_in_dim(blocks, s, 0, keepdims=False)
+        trow = jax.lax.dynamic_index_in_dim(tile_row, s, 0,
+                                            keepdims=False)
+        tcol = jax.lax.dynamic_index_in_dim(tile_col, s, 0,
+                                            keepdims=False)
+        x_next = jax.lax.ppermute(x_rot, axis_name, _ring_step_perm(p))
+        st = jnp.take(x_rot.reshape(q_loc, tile, 2 * f), tcol, axis=0)
+        pc_s, x_s = st[..., :f], st[..., f:]           # (s_max, T, F)
+        ph_k = jnp.take(ph_t, trow, axis=0)            # (s_max, T, F)
+        z = jax.nn.sigmoid(ph_k[:, :, None, :] + pc_s[:, None, :, :])
+        contrib = jnp.where(blk[..., None] != 0.0,
+                            blk[..., None] * z * x_s[:, None, :, :], 0.0)
+        part = jnp.sum(contrib, axis=2)                # (s_max, T, F)
+        acc = acc + jax.ops.segment_sum(part, trow, num_segments=q_loc)
+        return (x_next, acc), None
+
+    (_, acc), _ = jax.lax.scan(step, (pcx_shard, init_acc),
+                               jnp.arange(p, dtype=jnp.int32))
+    return acc.reshape(q_loc * tile, f)
+
+
+def make_ring_gated_tiled(mesh: Mesh, axis: str, q_loc: int,
+                          tile: int) -> Callable:
+    """shard_map wrapper over `_ring_gated_tiled_shard`:
+
+        (blocks, tile_row, tile_col, PH, PCX, in_counts) -> agg
+
+    with PH (P * n_loc, F) the resident dst-gate projection and PCX
+    (P * n_loc, 2F) the rotating (pc || x) stack, both row-sharded."""
+    p = int(mesh.shape[axis])
+    body = partial(_ring_gated_tiled_shard, axis_name=axis, q_loc=q_loc,
+                   tile=tile, num_shards=p)
+
+    def inner(blocks, tile_row, tile_col, ph, pcx, counts):
+        return body(blocks[0], tile_row[0], tile_col[0], ph, pcx,
+                    counts[0])
+
+    return shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(axis, None, None, None, None), P(axis, None, None),
+                  P(axis, None, None), P(axis, None), P(axis, None),
+                  P(axis, None)),
+        out_specs=P(axis, None))
+
+
+def _ring_gated_packed_shard(rows, cols, vals, ph_shard, pcx_shard,
+                             counts, *, axis_name: str, n_loc: int,
+                             num_shards: int):
+    p = num_shards
+    me = jax.lax.axis_index(axis_name)
+    f = pcx_shard.shape[1] // 2
+    init_acc = _pvary(jnp.zeros((n_loc, f), jnp.float32), axis_name)
+
+    def step(carry, k):
+        x_rot, acc = carry
+        s = jax.lax.rem(me + k, p)
+        rw = jax.lax.dynamic_index_in_dim(rows, s, 0, keepdims=False)
+        c = jax.lax.dynamic_index_in_dim(cols, s, 0, keepdims=False)
+        v = jax.lax.dynamic_index_in_dim(vals, s, 0, keepdims=False)
+        x_next = jax.lax.ppermute(x_rot, axis_name, _ring_step_perm(p))
+        st = jnp.take(x_rot, c, axis=0)                # (L, 2F)
+        pc_at, x_at = st[:, :f], st[:, f:]
+        ph_at = jnp.take(ph_shard, rw, axis=0)         # (L, F)
+        z = jax.nn.sigmoid(ph_at + pc_at)
+        contrib = jnp.where((v != 0.0)[:, None],
+                            v[:, None] * z * x_at, 0.0)
+        acc = acc + jax.ops.segment_sum(contrib, rw, num_segments=n_loc)
+        return (x_next, acc), None
+
+    (_, acc), _ = jax.lax.scan(step, (pcx_shard, init_acc),
+                               jnp.arange(p, dtype=jnp.int32))
+    return acc
+
+
+def make_ring_gated_packed(mesh: Mesh, axis: str, n_loc: int) -> Callable:
+    """shard_map wrapper over `_ring_gated_packed_shard`:
+
+        (rows, cols, vals, PH, PCX, in_counts) -> agg"""
+    p = int(mesh.shape[axis])
+    body = partial(_ring_gated_packed_shard, axis_name=axis,
+                   n_loc=n_loc, num_shards=p)
+
+    def inner(rows, cols, vals, ph, pcx, counts):
+        return body(rows[0], cols[0], vals[0], ph, pcx, counts[0])
+
+    return shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None, None),
+                  P(axis, None, None), P(axis, None), P(axis, None),
+                  P(axis, None)),
         out_specs=P(axis, None))

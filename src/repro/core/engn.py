@@ -114,6 +114,18 @@ class EnGNConfig:
     # set by training entry points (launch/train.py --gnn), left False
     # for inference/serving.
     training: bool = False
+    # Stage contract (DESIGN.md C10): models whose messages need more
+    # than the default single src projection declare it here (on their
+    # own *copy* of the config), so `prepare_graph` builds the matching
+    # typed/gated carriers per backend.  None = default contract;
+    # "typed" = per-relation messages (R-GCN), with `num_relations`
+    # edge types and, when `rel_normalize`, the per-(dst, rel) mean
+    # normalisation 1/|N_r(dst)| folded into the edge weights host-side
+    # (feature-independent, so every backend's typed aggregate is a
+    # plain sum); "gated" = dst+src sigmoid-gated messages (Gated-GCN).
+    stage_contract: Optional[str] = None
+    num_relations: int = 1
+    rel_normalize: bool = False
     dtype: Any = jnp.float32
 
 
@@ -141,6 +153,39 @@ class EnGNLayer:
         """Default: ReLU activation."""
         return jax.nn.relu(agg)
 
+    # -- stage contract (DESIGN.md C10) -----------------------------------
+    def stage_spec(self) -> Optional[Dict[str, Any]]:
+        """The model's per-stage contract, or None for the default
+        (message = edge_val * feature_extraction(x_src), which the
+        historical fast paths serve unchanged).  Models whose messages
+        read the destination endpoint or the edge type return a spec
+        every backend dispatches on:
+
+          {"kind": "typed", "num_relations": R, "channels": H,
+           "normalize": bool}   — per-relation messages (R-GCN): the
+              layer also provides `src_payload(params, x) -> (N, R*H)`,
+              the stacked per-relation projections each typed tile /
+              stripe / edge selects its slice of;
+          {"kind": "gated"}     — dst+src sigmoid-gated messages
+              (Gated-GCN): the layer provides `gate_dst` / `gate_src`
+              projections; the message source payload is x itself.
+
+        Both kinds aggregate by sum (Eq. 3-4) and keep `update` as the
+        vertex-wise stage."""
+        return None
+
+    def extract(self, params, x_src: jnp.ndarray, x_dst: jnp.ndarray,
+                edge_val: jnp.ndarray, rel) -> jnp.ndarray:
+        """The canonical per-edge message function (the C10 stage
+        contract): given both endpoints' features, the edge weight and
+        the edge type, produce the message the aggregate reduces.  The
+        segment reference consumes this literally; the tiled / ring /
+        blocked backends consume the factored per-vertex forms
+        (`feature_extraction`, `src_payload`, `gate_dst`/`gate_src`)
+        that make the same messages without edge-shaped weights.
+        Default: edge_val * feature_extraction(x_src)."""
+        return edge_val[:, None] * self.feature_extraction(params, x_src)
+
     # -- DASR (S5.2): choose sigma(A(XW)) vs sigma((AX)W) -----------------
     def dasr_order(self) -> str:
         cfg = self.cfg
@@ -162,6 +207,16 @@ class EnGNLayer:
               aggregate_fn: Optional[Callable] = None) -> jnp.ndarray:
         """graph: dict from `prepare_graph` (device arrays, or the host
         tile store when the effective backend is the streamed "tiled")."""
+        spec = self.stage_spec()
+        if spec is not None:
+            if aggregate_fn is not None:
+                # a custom reduce cannot see the typed/gated message
+                # structure — refusing beats silently ignoring it
+                raise ValueError(
+                    f"{type(self).__name__} aggregates through its "
+                    f"{spec['kind']!r} stage contract; a custom "
+                    f"aggregate_fn is not supported")
+            return self._apply_staged(params, graph, x, spec)
         backend = graph.get("backend", self.cfg.backend)
         if backend == "tiled" and aggregate_fn is None:
             # under a jit/grad trace (training, or a jitted caller) the
@@ -193,6 +248,187 @@ class EnGNLayer:
         tmp = self.feature_extraction(params, x)        # XW  (per src vertex)
         h = agg(tmp)                                    # A(XW)
         return self.update(params, x, h)
+
+    # -- staged models on every backend (DESIGN.md C10) -------------------
+    def _apply_staged(self, params, graph, x, spec) -> jnp.ndarray:
+        cfg = self.cfg
+        backend = graph.get("backend", cfg.backend)
+        if cfg.aggregate_op != "sum":
+            raise ValueError(
+                f"the {spec['kind']!r} stage contract aggregates by sum "
+                f"(Eq. 3-4); got aggregate_op={cfg.aggregate_op!r}")
+        if backend == "fused":
+            raise ValueError(
+                "the fused Fig. 8 kernel serves the default contract "
+                "only; use blocked/tiled/ring for staged models")
+        if spec["kind"] == "typed":
+            return self._staged_typed(params, graph, x, spec, backend)
+        if spec["kind"] == "gated":
+            return self._staged_gated(params, graph, x, backend)
+        raise ValueError(spec["kind"])
+
+    def _staged_typed(self, params, graph, x, spec, backend):
+        """Relation-typed messages (R-GCN, Eq. 3) on every backend: the
+        per-vertex payload is the (N, R*H) stack of all relations'
+        projections; each typed edge carrier (tile, stripe, flat entry)
+        selects its own relation's H-wide slice, and the aggregate is a
+        plain sum — the per-(dst, rel) normalisation is either folded
+        into the carrier weights at prepare time (`rel_normed`) or, on
+        raw segment dicts, computed in-trace here."""
+        n = graph["n"]
+        r = spec["num_relations"]
+        h = spec["channels"]
+        if backend == "tiled":
+            ex = graph["tiled_exec"]
+            if _is_traced(params, x):
+                from repro.core.tiled import make_streamed_typed_sum
+                agg_fn = make_streamed_typed_sum(ex)
+                xj = jnp.asarray(x, jnp.float32)
+                return self.update(params, xj,
+                                   agg_fn(self.src_payload(params, xj)))
+            fns = self._tiled_stage_fns()
+            xh = np.asarray(x, np.float32)
+            agg = ex.aggregate(xh, "sum", order="auto",
+                               extract_fn=partial(fns["src_payload"],
+                                                  params),
+                               extract_dim=r * h, out_dim_hint=h,
+                               rel_channels=h)
+            return ex.stream_map(partial(fns["update"], params), xh, agg)
+        x = jnp.asarray(x, self.cfg.dtype)
+        if backend == "segment":
+            src, dst, rel = graph["src"], graph["dst"], graph["rel"]
+            val = graph.get("val")
+            val = (jnp.ones(src.shape[0], jnp.float32) if val is None
+                   else jnp.asarray(val, jnp.float32))
+            if spec.get("normalize") and not graph.get("rel_normed"):
+                key = dst * r + rel
+                cnt = jax.ops.segment_sum(jnp.ones_like(val), key,
+                                          num_segments=n * r)
+                val = val / jnp.maximum(cnt[key], 1.0)
+            if self.dasr_order() == "afu":
+                # aggregate per (dst, rel) first, then one batched
+                # projection — Eq. 7's cheaper order when F < H
+                ev = x[src] * val[:, None]
+                agg_r = jax.ops.segment_sum(ev, dst * r + rel,
+                                            num_segments=n * r)
+                agg = jnp.einsum("nrf,rfh->nh",
+                                 agg_r.reshape(n, r, x.shape[1]),
+                                 params["wr"])
+            else:
+                ev = self.extract(params, x[src], x[dst], val, rel)
+                agg = jax.ops.segment_sum(ev, dst, num_segments=n)
+            return self.update(params, x, agg)
+        if backend == "blocked":
+            xw = self.src_payload(params, x)              # (n, r*h)
+            if "typed_flat" in graph:
+                gsrc, gdst, gval, grel = graph["typed_flat"]
+                ev = gval[:, None] * xw.reshape(n * r, h)[gsrc * r + grel]
+                agg = jax.ops.segment_sum(ev, gdst, num_segments=n)
+            else:
+                from repro.kernels.rer_spmm import ops as spmm_ops
+                pad_n = graph["blocks_meta"]["padded"]
+                xf = jnp.zeros((pad_n, r * h), x.dtype).at[:n].set(xw)
+                y = None
+                for blk in graph["typed_blocks"]:
+                    rr = blk["rel"]
+                    part = spmm_ops.blocked_spmm(
+                        blk["blocks"], blk["block_row"], blk["block_col"],
+                        xf[:, rr * h:(rr + 1) * h],
+                        q=blk["q"], op="sum")
+                    y = part if y is None else y + part
+                agg = (y[:n] if y is not None
+                       else jnp.zeros((n, h), x.dtype))
+            return self.update(params, x, agg)
+        if backend == "ring":
+            pad_n = graph["ring_meta"]["padded"]
+            xw = self.src_payload(params, x)
+            xf = jnp.zeros((pad_n, r * h), jnp.float32).at[:n].set(xw)
+            y = graph["ring_fn"](*graph["ring_operands"], xf,
+                                 graph["ring_counts"])
+            return self.update(params, x, y[:n])
+        raise ValueError(backend)
+
+    def _staged_gated(self, params, graph, x, backend):
+        """Dst+src sigmoid-gated messages (Gated-GCN, Eq. 4) on every
+        backend: message = val * sigma(ph[dst] + pc[src]) * x[src] with
+        ph = gate_dst(x), pc = gate_src(x).  The projections are
+        per-vertex, so the gate rides the carriers — ph on the resident
+        destination side (tiled) or the stationary shard (ring), pc and
+        x on the streamed/rotating source side."""
+        n = graph["n"]
+        if backend == "tiled":
+            ex = graph["tiled_exec"]
+            if _is_traced(params, x):
+                from repro.core.tiled import make_streamed_gated
+                gated = make_streamed_gated(ex)
+                xj = jnp.asarray(x, jnp.float32)
+                agg = gated(self.gate_dst(params, xj),
+                            self.gate_src(params, xj), xj)
+                return self.update(params, xj, agg)
+            fns = self._tiled_stage_fns()
+            xh = np.asarray(x, np.float32)
+            ph = ex.stream_map(partial(fns["gate_dst"], params), xh)
+            pc = ex.stream_map(partial(fns["gate_src"], params), xh)
+            agg = ex.gated_aggregate(ph, pc, xh)
+            return ex.stream_map(partial(fns["update"], params), xh, agg)
+        x = jnp.asarray(x, self.cfg.dtype)
+        ph = self.gate_dst(params, x)
+        pc = self.gate_src(params, x)
+        if backend == "segment":
+            src, dst = graph["src"], graph["dst"]
+            val = graph.get("val")
+            val = (jnp.ones(src.shape[0], jnp.float32) if val is None
+                   else jnp.asarray(val, jnp.float32))
+            ev = self.extract(params, x[src], x[dst], val, None)
+            agg = jax.ops.segment_sum(ev, dst, num_segments=n)
+            return self.update(params, x, agg)
+        if backend == "blocked":
+            meta = graph["blocks_meta"]
+            pad_n = meta["padded"]
+
+            def pad(a):
+                return jnp.zeros((pad_n, a.shape[1]),
+                                 jnp.float32).at[:n].set(a)
+            if "packed_flat" in graph:
+                gsrc, gdst, gval = graph["packed_flat"]
+                xf, phf, pcf = pad(x), pad(ph), pad(pc)
+                z = jax.nn.sigmoid(phf[gdst] + pcf[gsrc])
+                ev = gval[:, None] * z * xf[gsrc]
+                agg = jax.ops.segment_sum(ev, gdst,
+                                          num_segments=pad_n)[:n]
+            elif "packed_groups" in graph:
+                raise ValueError(
+                    "the gated contract needs the flat packed carrier "
+                    "(XLA gather); the Mosaic bucket-group layout does "
+                    "not carry endpoint projections — use "
+                    "tile_format='dense' on TPU")
+            else:
+                q, t = meta["q"], meta["tile"]
+                blocks = graph["blocks"]
+                brow, bcol = graph["block_row"], graph["block_col"]
+                xt = pad(x).reshape(q, t, -1)
+                pht = pad(ph).reshape(q, t, -1)
+                pct = pad(pc).reshape(q, t, -1)
+                z = jax.nn.sigmoid(pht[brow][:, :, None, :]
+                                   + pct[bcol][:, None, :, :])
+                contrib = jnp.where(
+                    blocks[..., None] != 0.0,
+                    blocks[..., None] * z * xt[bcol][:, None, :, :], 0.0)
+                part = jnp.sum(contrib, axis=2)       # (nnzb, t, f)
+                agg = jax.ops.segment_sum(
+                    part, brow, num_segments=q).reshape(pad_n, -1)[:n]
+            return self.update(params, x, agg)
+        if backend == "ring":
+            pad_n = graph["ring_meta"]["padded"]
+
+            def pad(a):
+                return jnp.zeros((pad_n, a.shape[1]),
+                                 jnp.float32).at[:n].set(a)
+            pcx = jnp.concatenate([pad(pc), pad(x)], axis=1)
+            y = graph["ring_fn"](*graph["ring_operands"], pad(ph), pcx,
+                                 graph["ring_counts"])
+            return self.update(params, x, y[:n])
+        raise ValueError(backend)
 
     # -- streamed out-of-core path, differentiable (DESIGN.md C9) ---------
     def _apply_tiled_diff(self, params, graph, x) -> jnp.ndarray:
@@ -233,6 +469,13 @@ class EnGNLayer:
                     lambda p, xb, ab: self.update(
                         p, xb, self.feature_extraction(p, ab))),
             }
+            # staged models (C10) add their per-vertex projections: the
+            # typed src payload and the gated endpoint projections ride
+            # the same per-interval streaming as "extract"
+            for extra in ("src_payload", "gate_dst", "gate_src"):
+                fn = getattr(self, extra, None)
+                if fn is not None:
+                    fns[extra] = jax.jit(fn)
             self._tiled_jit = fns
         return fns
 
@@ -335,17 +578,48 @@ class EnGNLayer:
         raise ValueError(backend)
 
 
+def fold_rel_norm(g: COOGraph) -> COOGraph:
+    """Fold R-GCN's per-(dst, rel) mean normalisation 1/|N_r(dst)| into
+    the edge weights (Eq. 3).  The count is feature-independent, so
+    folding it host-side turns the typed aggregate into a plain sum on
+    every backend — tiles, ring stripes and flat entries all carry the
+    already-normalised coefficients."""
+    if g.rel is None:
+        raise ValueError("fold_rel_norm needs a relation-typed graph")
+    key = g.dst.astype(np.int64) * g.num_relations + g.rel
+    cnt = np.bincount(key, minlength=g.num_vertices * g.num_relations)
+    val = (g.weights() / np.maximum(cnt[key], 1)).astype(np.float32)
+    return COOGraph(g.num_vertices, g.src, g.dst, val, g.rel,
+                    g.num_relations)
+
+
+def _maybe_fold_rel_norm(g: COOGraph, cfg: EnGNConfig, rel_normed: bool):
+    """(graph, rel_normed) after applying the config's normalisation at
+    most once across the prepare_* call chain."""
+    if (cfg.rel_normalize and not rel_normed and g.rel is not None
+            and g.num_relations > 1):
+        return fold_rel_norm(g), True
+    return g, rel_normed
+
+
 def prepare_tiled(g: COOGraph, cfg: EnGNConfig,
                   out_dim: Optional[int] = None,
-                  impl: Optional[str] = None) -> Dict[str, Any]:
+                  impl: Optional[str] = None,
+                  rel_normed: bool = False) -> Dict[str, Any]:
     """Build the graph dict for the streamed out-of-core backend: the
     Q x Q edge-tile store stays in host memory; tile/chunk sizes are
     fitted to the device budget for the layer's wider feature dim."""
     h = out_dim if out_dim is not None else cfg.out_dim
+    g, _ = _maybe_fold_rel_norm(g, cfg, rel_normed)
     # training pre-sizes the streaming step for the backward sweeps:
     # the max VJP streams a (y, g/cnt) stack twice as wide as the
-    # forward activations (DESIGN.md C9)
+    # forward activations (DESIGN.md C9); the typed contract streams
+    # the (N, R*H) stacked payload, the gated one a 2F-wide stream
     dim_hint = max(cfg.in_dim, h) * (2 if cfg.training else 1)
+    if cfg.stage_contract == "typed":
+        dim_hint = max(dim_hint, cfg.num_relations * h)
+    elif cfg.stage_contract == "gated":
+        dim_hint = max(dim_hint, 2 * cfg.in_dim)
     ex = TiledExecutor(g, tile=cfg.tile, chunk=cfg.tiled_chunk,
                        budget_bytes=cfg.device_budget_bytes, impl=impl,
                        dim_hint=dim_hint,
@@ -373,7 +647,8 @@ def prepare_tiled(g: COOGraph, cfg: EnGNConfig,
 
 
 def prepare_ring(g: COOGraph, cfg: EnGNConfig,
-                 out_dim: Optional[int] = None, plan=None, mesh=None):
+                 out_dim: Optional[int] = None, plan=None, mesh=None,
+                 rel_normed: bool = False):
     """Build the graph dict for the sharded ring backend (C2):
     destination vertices (and their stripe of edges) are partitioned
     across a ring mesh; each device keeps its stripe and accumulator
@@ -391,13 +666,20 @@ def prepare_ring(g: COOGraph, cfg: EnGNConfig,
     from repro.core.dataflow import (PackedRingShards,
                                      build_packed_ring_shards,
                                      build_ring_tile_shards,
+                                     make_ring_gated_packed,
+                                     make_ring_gated_tiled,
                                      make_ring_packed_aggregate,
                                      make_ring_tiled_aggregate,
+                                     make_ring_typed_sum_packed,
+                                     make_ring_typed_sum_tiled,
                                      ring_feature_bytes,
                                      ring_stripe_bytes)
     from repro.distributed.sharding import ring_mesh
     from jax.sharding import NamedSharding, PartitionSpec as P
     h = out_dim if out_dim is not None else cfg.out_dim
+    g, rel_normed = _maybe_fold_rel_norm(g, cfg, rel_normed)
+    typed = (cfg.stage_contract == "typed" and g.rel is not None
+             and g.num_relations > 1)
     if mesh is None:
         mesh = ring_mesh(cfg.ring_shards, cfg.ring_axis)
     p = int(mesh.devices.size)
@@ -416,7 +698,14 @@ def prepare_ring(g: COOGraph, cfg: EnGNConfig,
         else:
             plan = build_ring_tile_shards(g, p, tile=cfg.tile)
     packed = isinstance(plan, PackedRingShards)
-    feat_need = ring_feature_bytes(plan.n_loc, cfg.in_dim, h)
+    # the staged contracts widen the rotating shard: typed rotates the
+    # (N, R*H) stacked payload, gated rotates the (pc || x) 2F stream
+    feat_f = cfg.in_dim
+    if typed:
+        feat_f = max(feat_f, g.num_relations * h)
+    elif cfg.stage_contract == "gated":
+        feat_f = max(feat_f, 2 * cfg.in_dim)
+    feat_need = ring_feature_bytes(plan.n_loc, feat_f, h)
     if cfg.training:
         feat_need *= 2          # cotangent twins of the rotating shards
     need = plan.device_bytes() + feat_need
@@ -427,21 +716,44 @@ def prepare_ring(g: COOGraph, cfg: EnGNConfig,
                 f"({p} shards), budget is {cfg.device_budget_bytes} "
                 f"per shard (more shards shrink the stripe; "
                 f"auto_spill=True streams tiles out-of-core instead)")
-        return prepare_tiled(g, cfg, out_dim)
+        return prepare_tiled(g, cfg, out_dim, rel_normed=rel_normed)
     spec = NamedSharding(mesh, P(cfg.ring_axis))
     if packed:
-        operands = tuple(jax.device_put(a, spec)
-                         for a in (plan.rows, plan.cols, plan.vals))
-        ring_fn = make_ring_packed_aggregate(mesh, cfg.ring_axis,
-                                             cfg.aggregate_op,
+        operands = [plan.rows, plan.cols, plan.vals]
+        if typed:
+            if plan.rels is None:
+                raise ValueError(
+                    "typed stage contract needs a relation-typed ring "
+                    "plan (build from the typed COOGraph)")
+            operands.append(plan.rels)
+            ring_fn = make_ring_typed_sum_packed(
+                mesh, cfg.ring_axis, plan.n_loc, g.num_relations)
+        elif cfg.stage_contract == "gated":
+            ring_fn = make_ring_gated_packed(mesh, cfg.ring_axis,
                                              plan.n_loc)
+        else:
+            ring_fn = make_ring_packed_aggregate(mesh, cfg.ring_axis,
+                                                 cfg.aggregate_op,
+                                                 plan.n_loc)
     else:
-        operands = tuple(jax.device_put(a, spec)
-                         for a in (plan.blocks, plan.tile_row,
-                                   plan.tile_col))
-        ring_fn = make_ring_tiled_aggregate(mesh, cfg.ring_axis,
-                                            cfg.aggregate_op,
+        operands = [plan.blocks, plan.tile_row, plan.tile_col]
+        if typed:
+            if plan.tile_rel is None:
+                raise ValueError(
+                    "typed stage contract needs a relation-typed ring "
+                    "plan (build from the typed COOGraph)")
+            operands.append(plan.tile_rel)
+            ring_fn = make_ring_typed_sum_tiled(
+                mesh, cfg.ring_axis, plan.q_loc, plan.tile,
+                g.num_relations)
+        elif cfg.stage_contract == "gated":
+            ring_fn = make_ring_gated_tiled(mesh, cfg.ring_axis,
                                             plan.q_loc, plan.tile)
+        else:
+            ring_fn = make_ring_tiled_aggregate(mesh, cfg.ring_axis,
+                                                cfg.aggregate_op,
+                                                plan.q_loc, plan.tile)
+    operands = tuple(jax.device_put(a, spec) for a in operands)
     d: Dict[str, Any] = {
         "n": g.num_vertices, "backend": "ring",
         "ring_operands": operands,
@@ -463,6 +775,7 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
     the device-budget spill to the streamed tiled backend."""
     backend = cfg.backend
     h = out_dim if out_dim is not None else cfg.out_dim
+    g, rel_normed = _maybe_fold_rel_norm(g, cfg, False)
     if cfg.device_budget_bytes and backend not in ("tiled", "ring"):
         # (the ring gate lives in prepare_ring: it prices the actual
         # per-shard plan, not the closed-form upper bound)
@@ -481,14 +794,21 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
                     f"tiles out-of-core)")
             backend = "tiled"
     if backend == "tiled":
-        return prepare_tiled(g, cfg, out_dim)
+        return prepare_tiled(g, cfg, out_dim, rel_normed=rel_normed)
     d: Dict[str, Any] = {"n": g.num_vertices, "backend": backend}
     if backend == "segment":
         d["src"] = jnp.asarray(g.src)
         d["dst"] = jnp.asarray(g.dst)
         if g.val is not None:
             d["val"] = jnp.asarray(g.val)
+        if g.rel is not None:
+            d["rel"] = jnp.asarray(g.rel)
+            d["num_relations"] = g.num_relations
+            d["rel_normed"] = rel_normed
         return d
+    if (backend == "blocked" and cfg.stage_contract == "typed"
+            and g.rel is not None and g.num_relations > 1):
+        return _prepare_blocked_typed(g, cfg, d, h)
     if backend in ("blocked", "fused"):
         # The adaptive order (Table 3) is recorded for the I/O analysis;
         # on TPU the kernel itself mandates the dst-stationary layout
@@ -521,8 +841,12 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
                 from repro.kernels.rer_gather import ops as gather_ops
                 # upload only the representation _aggregate will use:
                 # pow2-bucket groups feed the Mosaic kernel on TPU, the
-                # flat entry arrays feed the one-launch XLA path
-                if gather_ops.default_impl() == "xla":
+                # flat entry arrays feed the one-launch XLA path.  The
+                # gated contract always takes flat entries — its sigmoid
+                # gate needs per-entry endpoint gathers the bucket-group
+                # layout does not carry (DESIGN.md C10).
+                if (gather_ops.default_impl() == "xla"
+                        or cfg.stage_contract == "gated"):
                     flat = gather_ops.flat_entries(packed)
                     d["packed_flat"] = tuple(jnp.asarray(a)
                                              for a in flat)
@@ -576,5 +900,54 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
                             "format_choice": choice}
         return d
     if backend == "ring":
-        return prepare_ring(g, cfg, out_dim)
+        return prepare_ring(g, cfg, out_dim, rel_normed=rel_normed)
     raise ValueError(backend)
+
+
+def _prepare_blocked_typed(g: COOGraph, cfg: EnGNConfig,
+                           d: Dict[str, Any], h: int) -> Dict[str, Any]:
+    """Device carriers for the typed contract on the blocked backend
+    (DESIGN.md C10).  tile_format "dense" keeps one blocked-SpMM plan
+    *per relation* (each contracts its own H-wide slice of the stacked
+    src payload — the bitwise dense oracle); "packed"/"auto" carries the
+    flat merged entries with a per-entry rel column, one gather +
+    segment launch total."""
+    from repro.graphs.partition import build_tile_store, pack_tile_store
+    n = g.num_vertices
+    r = g.num_relations
+    order = tile_schedule_order(cfg.in_dim, h)
+    t = cfg.tile
+    q = -(-n // t)
+    if cfg.tile_format == "dense":
+        from repro.kernels.rer_spmm.ops import prepare_blocks
+        d["typed_blocks"] = []
+        for rr in range(r):
+            m = g.rel == rr
+            if not m.any():
+                continue
+            sub = COOGraph(n, g.src[m], g.dst[m], g.weights()[m])
+            b = coo_to_blocked(sub, t, order="column")
+            blocks, brow, bcol = prepare_blocks(b.blocks, b.block_row,
+                                                b.block_col, b.q)
+            d["typed_blocks"].append(
+                {"rel": rr, "q": b.q, "blocks": jnp.asarray(blocks),
+                 "block_row": jnp.asarray(brow),
+                 "block_col": jnp.asarray(bcol)})
+        d["blocks_meta"] = {"q": q, "padded": q * t, "order": order,
+                            "tile": t, "tile_format": "dense",
+                            "format_choice": None, "num_relations": r}
+        return d
+    store = build_tile_store(g, t)
+    ps = pack_tile_store(store)
+    from repro.kernels.rer_gather import ops as gather_ops
+    gsrc, gdst, gval = gather_ops.flat_entries(ps)
+    tile_of = np.repeat(np.arange(ps.nnzb, dtype=np.int64),
+                        np.diff(ps.entry_ptr))
+    grel = ps.block_rel[tile_of].astype(np.int32)
+    d["typed_flat"] = tuple(jnp.asarray(a)
+                            for a in (gsrc, gdst, gval, grel))
+    d["blocks_meta"] = {"q": store.q, "padded": store.padded_vertices,
+                        "order": order, "tile": store.tile,
+                        "tile_format": "packed", "format_choice": None,
+                        "num_relations": r}
+    return d

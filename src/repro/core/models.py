@@ -4,17 +4,34 @@
 |-----------|--------------------------------------------|-----------|-------------------------------------|
 | GCN       | h_u * d^-1/2 (edge-normalised) then XW     | sum       | ReLU(W V_temp)  [W folded via DASR] |
 | GS-Pool   | ReLU(W_pool x_u + b)                       | max       | ReLU(W concat(V_temp, h_v))         |
-| R-GCN     | per-relation normalised                    | sum       | ReLU(sum_r W_r V_r + W_0 h)         |
-| Gated-GCN | sigmoid(W_H h_v + W_C h_u) . h_u           | sum       | ReLU(W V_temp)                      |
+| R-GCN     | per-relation normalised, typed contract    | sum       | ReLU(sum_r W_r V_r + W_0 h)         |
+| Gated-GCN | sigmoid(W_H h_v + W_C h_u) . h_u, gated    | sum       | ReLU(W V_temp)                      |
 | GRN       | h_u                                        | sum       | GRU(h_v, W V_temp)                  |
+
+Backend coverage (every cell is exercised by tests/test_backend_matrix.py;
+"fused" serves the default linear-sum contract only, per DESIGN.md C10):
+
+| model     | segment | blocked | fused | ring | tiled (streamed) |
+|-----------|---------|---------|-------|------|------------------|
+| GCN       |   yes   |   yes   |  yes  | yes  |       yes        |
+| GS-Pool   |   yes   |   yes   |   -   | yes  |       yes        |
+| R-GCN     |   yes   |   yes   |   -   | yes  |       yes        |
+| Gated-GCN |   yes   |   yes   |   -   | yes  |       yes        |
+| GRN       |   yes   |   yes   |   -   | yes  |       yes        |
+
+R-GCN and Gated-GCN ride the C10 stage contract (`stage_spec()` +
+`src_payload` / `gate_dst` / `gate_src`), so relation-typed and gated
+messages stream, shard and differentiate like any other model.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engn import EnGNConfig, EnGNLayer, segment_aggregate
+from repro.core.engn import EnGNConfig, EnGNLayer
 
 
 def _glorot(key, shape, dtype=jnp.float32):
@@ -35,8 +52,10 @@ class GSPoolLayer(EnGNLayer):
     """GraphSAGE-Pool (Eq. 2): max aggregator + concat self in update."""
 
     def __init__(self, cfg: EnGNConfig, name: str = "gs_pool"):
-        cfg.aggregate_op = "max"
-        cfg.stage_order = "fau"   # max is non-linear: no reordering (S6.3)
+        # copy-on-configure: never mutate the caller's (possibly shared) cfg
+        cfg = dataclasses.replace(
+            cfg, aggregate_op="max",
+            stage_order="fau")    # max is non-linear: no reordering (S6.3)
         super().__init__(cfg, name)
 
     def init(self, key):
@@ -62,6 +81,11 @@ class RGCNLayer(EnGNLayer):
     through per-relation weights, plus a self-loop W_0 h."""
 
     def __init__(self, cfg: EnGNConfig, num_relations: int, name: str = "rgcn"):
+        # copy-on-configure: the typed stage contract (DESIGN.md C10) is
+        # part of this layer's identity, not the caller's shared cfg
+        cfg = dataclasses.replace(
+            cfg, stage_contract="typed", num_relations=num_relations,
+            rel_normalize=True)
         super().__init__(cfg, name)
         self.num_relations = num_relations
 
@@ -74,34 +98,27 @@ class RGCNLayer(EnGNLayer):
                           cfg.dtype),
         }
 
-    def apply(self, params, graph, x, aggregate_fn=None):
-        if graph.get("backend") == "tiled":
-            raise NotImplementedError(
-                "R-GCN needs per-relation edge aggregation and cannot "
-                "stream through the tiled executor; use the segment "
-                "backend (raise device_budget_bytes or pre-partition "
-                "the graph per relation)")
-        n = graph["n"]
-        src, dst, rel = graph["src"], graph["dst"], graph["rel"]
-        # per-edge normalisation 1/c_{i,r} = 1/|N_i^r|
-        ones = jnp.ones_like(dst, jnp.float32)
-        # count edges per (dst, rel) pair
-        key = dst * self.num_relations + rel
-        cnt = jax.ops.segment_sum(ones, key, num_segments=n * self.num_relations)
-        norm = 1.0 / jnp.maximum(cnt[key], 1.0)
-        # DASR applies per relation: aggregate first (AFU) keeps the edge
-        # work at F dims; extract-first (FAU) keeps it at H dims.
-        if self.dasr_order() == "fau":
-            xw = jnp.einsum("nf,rfh->rnh", x, params["wr"])     # R x N x H
-            ev = xw[rel, src] * norm[:, None]
-            agg = jax.ops.segment_sum(ev, dst, num_segments=n)
-        else:
-            # aggregate per relation in F dims, then contract with W_r
-            ev = x[src] * norm[:, None]
-            agg_rf = jax.ops.segment_sum(ev, key, num_segments=n * self.num_relations)
-            agg_rf = agg_rf.reshape(n, self.num_relations, x.shape[1])
-            agg = jnp.einsum("nrf,rfh->nh", agg_rf, params["wr"])
-        return jax.nn.relu(x @ params["w0"] + agg)
+    def stage_spec(self):
+        return {"kind": "typed", "num_relations": self.num_relations,
+                "channels": self.cfg.out_dim, "normalize": True}
+
+    def src_payload(self, params, x):
+        """The (N, R*H) stack of every relation's projection; each typed
+        carrier (tile / stripe / flat entry) selects its own H slice."""
+        r, h = self.num_relations, self.cfg.out_dim
+        xw = jnp.einsum("nf,rfh->nrh", x, params["wr"])
+        return xw.reshape(x.shape[0], r * h)
+
+    def extract(self, params, x_src, x_dst, edge_val, rel):
+        """Reference per-edge message: W_rel x_src scaled by the
+        (already rel-normalised) edge value."""
+        r, h = self.num_relations, self.cfg.out_dim
+        pay = self.src_payload(params, x_src).reshape(-1, r, h)
+        sel = jnp.take_along_axis(pay, rel[:, None, None], axis=1)[:, 0, :]
+        return edge_val[:, None] * sel
+
+    def update(self, params, x_self, agg):
+        return jax.nn.relu(x_self @ params["w0"] + agg)
 
 
 # ---------------------------------------------------------------------------
@@ -110,7 +127,10 @@ class GatedGCNLayer(EnGNLayer):
     message = eta . h_u, sum-aggregate, ReLU(W .) update."""
 
     def __init__(self, cfg: EnGNConfig, name: str = "gated_gcn"):
-        cfg.stage_order = "fau"   # gate depends on both endpoints: no reorder
+        # copy-on-configure: never mutate the caller's (possibly shared) cfg
+        cfg = dataclasses.replace(
+            cfg, stage_contract="gated",
+            stage_order="fau")  # gate depends on both endpoints: no reorder
         super().__init__(cfg, name)
 
     def init(self, key):
@@ -122,20 +142,23 @@ class GatedGCNLayer(EnGNLayer):
             "w": _glorot(k3, (cfg.in_dim, cfg.out_dim), cfg.dtype),
         }
 
-    def apply(self, params, graph, x, aggregate_fn=None):
-        if graph.get("backend") == "tiled":
-            raise NotImplementedError(
-                "Gated-GCN's edge gate depends on both endpoints and "
-                "cannot stream through the tiled executor; use the "
-                "segment backend (raise device_budget_bytes)")
-        n = graph["n"]
-        src, dst = graph["src"], graph["dst"]
-        # project once per vertex (N x F), gate per edge (E x F)
-        ph = x @ params["w_h"]          # destination part
-        pc = x @ params["w_c"]          # source part
-        eta = jax.nn.sigmoid(ph[dst] + pc[src])
-        ev = eta * x[src]
-        agg = segment_aggregate(ev, dst, n, "sum")
+    def stage_spec(self):
+        return {"kind": "gated"}
+
+    def gate_dst(self, params, x):
+        return x @ params["w_h"]
+
+    def gate_src(self, params, x):
+        return x @ params["w_c"]
+
+    def extract(self, params, x_src, x_dst, edge_val, rel):
+        """Reference per-edge message: eta_uv . h_u, weighted by the
+        edge value (1 for the unweighted graphs of Eq. 4)."""
+        eta = jax.nn.sigmoid(self.gate_dst(params, x_dst)
+                             + self.gate_src(params, x_src))
+        return edge_val[:, None] * eta * x_src
+
+    def update(self, params, x_self, agg):
         return jax.nn.relu(agg @ params["w"])
 
 

@@ -274,6 +274,111 @@ def _chunk_maxbwd_packed(acc, xv, rows, cols, vals, ygs):
         jnp.where(match, v[:, None] * g_at, 0.0), srcl, num_segments=t)
 
 
+@partial(jax.jit, static_argnames=("r", "h"))
+def _select_rel(xs, rels, *, r, h):
+    """Per-tile relation slice of a stacked source payload: xs is the
+    (C, T, R*H) interval stack (every relation's extracted messages for
+    every source vertex), rels the chunk's per-tile edge types; returns
+    the (C, T, H) stack each tile's reduction actually consumes.  This
+    is the whole trick of the relation-typed tile layout (DESIGN.md
+    C10): rel never rides the inner loop — it picks the slice once per
+    staged tile."""
+    c, t, ds = xs.shape
+    assert ds == r * h, (ds, r, h)
+    sel = jnp.take_along_axis(xs.reshape(c, t, r, h),
+                              rels[:, None, None, None], axis=2)
+    return sel[:, :, 0, :]
+
+
+@partial(jax.jit, static_argnames=("r",))
+def _chunk_step_sum_relscatter(acc, blocks, xs, rels, *, r):
+    """Backward chunk step of the typed streamed sum (runs on the
+    TRANSPOSED store): each tile's partial lands in its own relation's
+    column block of the (T, R, H) accumulator — the exact adjoint of
+    `_select_rel`'s per-tile slice."""
+    part = jnp.einsum("ktu,kuf->ktf", blocks, xs,
+                      preferred_element_type=jnp.float32)
+    onehot = jax.nn.one_hot(rels, r, dtype=jnp.float32)
+    return acc + jnp.einsum("ktf,kr->trf", part, onehot)
+
+
+@partial(jax.jit, static_argnames=("r",))
+def _packed_step_sum_relscatter(acc, rows, cols, vals, xs, rels, *, r):
+    """Packed twin of `_chunk_step_sum_relscatter`: per-tile partials
+    via a (tile, row) segment sum, then the same one-hot rel scatter."""
+    c, s = rows.shape
+    t, f = xs.shape[1], xs.shape[2]
+    gcols = (jnp.arange(c, dtype=jnp.int32)[:, None] * t
+             + cols).reshape(c * s)
+    gathered = jnp.take(xs.reshape(c * t, f), gcols, axis=0)
+    v = vals.reshape(c * s)
+    seg = (jnp.arange(c, dtype=jnp.int32)[:, None] * t
+           + rows).reshape(c * s)
+    part = jax.ops.segment_sum(v[:, None] * gathered, seg,
+                               num_segments=c * t).reshape(c, t, f)
+    onehot = jax.nn.one_hot(rels, r, dtype=jnp.float32)
+    return acc + jnp.einsum("ktf,kr->trf", part, onehot)
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def _chunk_step_gated(acc, blocks, stream, res, *, mode):
+    """Edgewise gated-message chunk step (dense tiles), one of three
+    passes sharing the same sweep (DESIGN.md C10):
+
+      * 'fwd': stream = (pc || x) source stacks, res = resident ph for
+        the destination interval; accumulates y = sum val*sigma(a)*x
+        with a = ph[dst] + pc[src];
+      * 'dst': same operands, accumulates sum val*sigma'(a)*x — the
+        dst-side gate gradient before the elementwise g multiply (the
+        forward activations are *recomputed*, like the max path);
+      * 'src': runs on the TRANSPOSED store — stream = (ph || g)
+        destination stacks, res = resident pc for the source interval;
+        accumulates [sum val*sigma(a)*g, sum val*sigma'(a)*g], the gx
+        half and the gpc half (before its x multiply)."""
+    f = res.shape[-1]
+    mask = blocks[..., None] != 0.0
+    if mode in ("fwd", "dst"):
+        pc, xs = stream[..., :f], stream[..., f:]
+        z = jax.nn.sigmoid(res[None, :, None, :] + pc[:, None, :, :])
+        w = z if mode == "fwd" else z * (1.0 - z)
+        contrib = jnp.where(mask, blocks[..., None] * w
+                            * xs[:, None, :, :], 0.0)
+        return acc + jnp.sum(contrib, axis=(0, 2))
+    ph, g = stream[..., :f], stream[..., f:]
+    z = jax.nn.sigmoid(ph[:, None, :, :] + res[None, :, None, :])
+    wg = jnp.where(mask, blocks[..., None] * g[:, None, :, :], 0.0)
+    gx = jnp.sum(wg * z, axis=(0, 2))
+    s2 = jnp.sum(wg * z * (1.0 - z), axis=(0, 2))
+    return acc + jnp.concatenate([gx, s2], axis=1)
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def _packed_step_gated(acc, rows, cols, vals, stream, res, *, mode):
+    """Packed twin of `_chunk_step_gated`: gather both streamed halves
+    at the entry coordinates, recompute the gate, segment-reduce over
+    the resident-interval rows."""
+    c, s = rows.shape
+    t, f = res.shape[0], res.shape[-1]
+    gcols = (jnp.arange(c, dtype=jnp.int32)[:, None] * t
+             + cols).reshape(c * s)
+    flat = stream.reshape(c * t, stream.shape[-1])
+    a_at = jnp.take(flat[:, :f], gcols, axis=0)
+    b_at = jnp.take(flat[:, f:], gcols, axis=0)
+    rowsf = rows.reshape(c * s)
+    res_at = jnp.take(res, rowsf, axis=0)
+    v = vals.reshape(c * s)
+    live = (v != 0.0)[:, None]
+    z = jax.nn.sigmoid(res_at + a_at)
+    if mode in ("fwd", "dst"):
+        w = z if mode == "fwd" else z * (1.0 - z)
+        contrib = jnp.where(live, v[:, None] * w * b_at, 0.0)
+        return acc + jax.ops.segment_sum(contrib, rowsf, num_segments=t)
+    wg = jnp.where(live, v[:, None] * b_at, 0.0)
+    gx = jax.ops.segment_sum(wg * z, rowsf, num_segments=t)
+    s2 = jax.ops.segment_sum(wg * z * (1.0 - z), rowsf, num_segments=t)
+    return acc + jnp.concatenate([gx, s2], axis=1)
+
+
 @partial(jax.jit, static_argnames=("op", "impl", "q"))
 def _chunk_step_kernel(acc, blocks, xs, *, op, impl, q):
     """Same chunk reduction expressed through the RER-SpMM kernel
@@ -390,6 +495,7 @@ class TiledExecutor:
         self._xcache: OrderedDict = OrderedDict()
         self._transposed: Optional["TiledExecutor"] = None
         self._diff_cache: Dict[str, Callable] = {}
+        self._rel_select: Optional[int] = None
 
     @classmethod
     def _from_stores(cls, store: EdgeTileStore,
@@ -408,6 +514,7 @@ class TiledExecutor:
         ex._xcache = OrderedDict()
         ex._transposed = None
         ex._diff_cache = {}
+        ex._rel_select = None
         return ex
 
     def transposed(self) -> "TiledExecutor":
@@ -450,15 +557,32 @@ class TiledExecutor:
     def aggregate(self, x: np.ndarray, op: str, order: str = "auto",
                   extract_fn: Optional[Callable] = None,
                   extract_dim: Optional[int] = None,
-                  out_dim_hint: Optional[int] = None) -> np.ndarray:
+                  out_dim_hint: Optional[int] = None,
+                  rel_channels: Optional[int] = None) -> np.ndarray:
         """A(x) (or A(extract(x))) streamed tile-by-tile; returns host
         (N, d).  `order` follows the adaptive scheduler when "auto":
         column-major iff F < 2H (Eq. 8), with F/H taken as the streamed
-        dim and `out_dim_hint`."""
+        dim and `out_dim_hint`.
+
+        `rel_channels=H` turns on the relation-typed path (DESIGN.md
+        C10): the streamed payload (x, or extract's output) is a
+        (N, R*H) stack of per-relation messages, and every staged tile
+        consumes the H-wide slice of its own `block_rel` — so a typed
+        aggregate costs one sweep, not R.  Requires a store built from
+        a typed graph."""
         x = np.ascontiguousarray(np.asarray(x, np.float32))
         if x.shape[0] != self.store.num_vertices:
             raise ValueError((x.shape, self.store.num_vertices))
         d = extract_dim if extract_fn is not None else x.shape[1]
+        if rel_channels is not None:
+            if self.store.block_rel is None:
+                raise ValueError(
+                    "rel_channels needs a relation-typed tile store "
+                    "(graph built with rel ids and num_relations > 1)")
+            if d != self.store.num_relations * rel_channels:
+                raise ValueError((d, self.store.num_relations,
+                                  rel_channels))
+            d = rel_channels
         if order == "auto":
             h = out_dim_hint if out_dim_hint is not None else d
             order = tile_schedule_order(x.shape[1], h)
@@ -470,12 +594,16 @@ class TiledExecutor:
         # jitted stage functions per layer instance)
         ext = extract_fn
         self._xcache = OrderedDict()
-        if order == "column":
-            out = self._sweep_column(x, base_op, ext, d)
-        elif order == "row":
-            out = self._sweep_row(x, base_op, ext, d)
-        else:
-            raise ValueError(order)
+        self._rel_select = rel_channels
+        try:
+            if order == "column":
+                out = self._sweep_column(x, base_op, ext, d)
+            elif order == "row":
+                out = self._sweep_row(x, base_op, ext, d)
+            else:
+                raise ValueError(order)
+        finally:
+            self._rel_select = None
         if op == "mean":
             out = out / np.maximum(self.store.in_counts, 1.0)[:, None]
         return out
@@ -567,6 +695,14 @@ class TiledExecutor:
         # it contributes nothing, and the chunk shape stays compile-stable
         xs.extend(xs[0] for _ in range(chunk - k))
         xs_dev = jnp.stack(xs)
+        if self._rel_select is not None:
+            # typed store: each tile picks its relation's H-wide slice
+            # of the (C, T, R*H) stack once per staging (padding tiles
+            # are all-zero, so their rel-0 slice contributes nothing)
+            rels = np.zeros(chunk, np.int32)
+            rels[:k] = st.block_rel[idx]
+            xs_dev = _select_rel(xs_dev, jnp.asarray(rels),
+                                 r=st.num_relations, h=self._rel_select)
         return payload, xs_dev
 
     def _chunk_step(self, acc, payload, xs_dev, op: str, chunk: int):
@@ -673,7 +809,12 @@ class TiledExecutor:
                 self.stats.staged_slots += t * t
                 payload = jax.device_put(blk_host)
             self.stats.h2d_tile_bytes += tb
-            return (payload, self._src_interval(x, j, ext))
+            x_dev = self._src_interval(x, j, ext)
+            if self._rel_select is not None:
+                h = self._rel_select
+                r_k = int(st.block_rel[k])
+                x_dev = x_dev[:, r_k * h:(r_k + 1) * h]
+            return (payload, x_dev)
 
         staged = stage(steps[0])
         for s, (j, k) in enumerate(steps):
@@ -837,6 +978,180 @@ class TiledExecutor:
         flush(cur_row, acc)
         return gx[:st.num_vertices]
 
+    # -- typed + gated passes (DESIGN.md C10) --------------------------
+    def typed_sum_vjp(self, g: np.ndarray) -> np.ndarray:
+        """Backward of the relation-typed streamed sum: re-stream the
+        TRANSPOSED typed tiles (rel rides each tile unchanged — a
+        tile's edge type is symmetric under src<->dst swap) and scatter
+        each tile's partial into its relation's column block, giving
+        the (N, R*H) cotangent of the stacked message payload."""
+        if self.store.block_rel is None:
+            raise ValueError("typed_sum_vjp needs a relation-typed store")
+        tex = self.transposed()
+        tex.reset_stats()
+        gx = tex._sweep_relscatter(
+            np.ascontiguousarray(np.asarray(g, np.float32)))
+        self.stats.add_backward(tex.stats)
+        return gx
+
+    def _sweep_relscatter(self, g: np.ndarray) -> np.ndarray:
+        """Runs on the TRANSPOSED executor: column-order sweep whose
+        (T, R, H) accumulator receives each tile's partial in its own
+        relation's block — the adjoint of `_select_rel`."""
+        st = self.store
+        t, q = st.tile, st.q
+        r = st.num_relations
+        h = g.shape[1]
+        chunk = self.effective_chunk(r * h)
+        gx = np.zeros((st.padded_vertices, r * h), np.float32)
+        steps: List[Tuple[int, np.ndarray]] = []
+        for i in range(q):
+            for c in chunk_tile_row(st.row_tiles(i), chunk,
+                                    snake=(i % 2 == 1)):
+                steps.append((i, c))
+        if not steps:
+            return gx[:st.num_vertices]
+        self._xcache = OrderedDict()
+
+        def flush(i, acc):
+            hb = np.asarray(acc).reshape(t, r * h)
+            self.stats.d2h_bytes += hb.nbytes
+            gx[i * t:(i + 1) * t] = hb
+
+        staged = self._stage_chunk(steps[0][1], g, None, chunk)
+        acc = None
+        cur_row: Optional[int] = None
+        for s, (i, idx) in enumerate(steps):
+            payload, gs_dev = staged
+            if i != cur_row:
+                if cur_row is not None:
+                    flush(cur_row, acc)
+                acc = jnp.zeros((t, r, h), jnp.float32)
+                cur_row = i
+            rels = np.zeros(chunk, np.int32)
+            rels[:idx.size] = st.block_rel[idx]
+            rels_dev = jnp.asarray(rels)
+            if self.double_buffer and s + 1 < len(steps):
+                staged = self._stage_chunk(steps[s + 1][1], g, None, chunk)
+            if self.tile_format == "packed":
+                rows, cols, vals = payload
+                acc = _packed_step_sum_relscatter(acc, rows, cols, vals,
+                                                  gs_dev, rels_dev, r=r)
+            else:
+                acc = _chunk_step_sum_relscatter(acc, payload, gs_dev,
+                                                 rels_dev, r=r)
+            self.stats.steps += 1
+            if not self.double_buffer and s + 1 < len(steps):
+                jax.block_until_ready(acc)
+                staged = self._stage_chunk(steps[s + 1][1], g, None, chunk)
+        flush(cur_row, acc)
+        return gx[:st.num_vertices]
+
+    def gated_aggregate(self, ph: np.ndarray, pc: np.ndarray,
+                        x: np.ndarray) -> np.ndarray:
+        """Streamed gated sum (Eq. 4): y[d] = sum over edges (s -> d) of
+        val * sigma(ph[d] + pc[s]) * x[s].  The dst-side gate input ph
+        is the *resident* interval of the column sweep, so the gate
+        costs no extra streaming beyond doubling the source payload
+        (pc || x)."""
+        stream = np.ascontiguousarray(
+            np.concatenate([pc, x], axis=1).astype(np.float32))
+        return self._sweep_gated(
+            stream, np.ascontiguousarray(np.asarray(ph, np.float32)),
+            "fwd")
+
+    def gated_vjp(self, ph: np.ndarray, pc: np.ndarray, x: np.ndarray,
+                  g: np.ndarray) -> Tuple[np.ndarray, np.ndarray,
+                                          np.ndarray]:
+        """Backward of the streamed gated sum: two recompute sweeps
+        (the gate recomputes its forward activations like the max path
+        — no edge-shaped residuals).  A forward-oriented sweep gives
+        the dst-side sum val*sigma'(a)*x (gph = g ⊙ that); the
+        transposed sweep streams (ph || g) against the resident pc and
+        yields both gx = A_sigma^T g and the pc half of the gate grad.
+        Traffic from both sweeps lands in `stats.bwd_*`."""
+        ph = np.ascontiguousarray(np.asarray(ph, np.float32))
+        pc = np.ascontiguousarray(np.asarray(pc, np.float32))
+        x = np.ascontiguousarray(np.asarray(x, np.float32))
+        g = np.ascontiguousarray(np.asarray(g, np.float32))
+        saved = self.stats
+        self.stats = TiledStats()
+        u = self._sweep_gated(
+            np.ascontiguousarray(np.concatenate([pc, x], axis=1)), ph,
+            "dst")
+        dst_stats = self.stats
+        self.stats = saved
+        self.stats.add_backward(dst_stats)
+        gph = g * u
+        tex = self.transposed()
+        tex.reset_stats()
+        both = tex._sweep_gated(
+            np.ascontiguousarray(np.concatenate([ph, g], axis=1)), pc,
+            "src")
+        self.stats.add_backward(tex.stats)
+        f = x.shape[1]
+        return gph, x * both[:, f:], both[:, :f]
+
+    def _sweep_gated(self, stream: np.ndarray, resident: np.ndarray,
+                     mode: str) -> np.ndarray:
+        """Column-order edgewise sweep shared by the three gated passes
+        (`_chunk_step_gated` documents the modes): `stream` is the
+        two-half source-side payload staged per tile chunk, `resident`
+        the per-row-interval device-resident half (ph forward, pc on
+        the transposed src-backward)."""
+        st = self.store
+        t, q = st.tile, st.q
+        f = resident.shape[1]
+        d_out = 2 * f if mode == "src" else f
+        chunk = self.effective_chunk(max(stream.shape[1], d_out))
+        out = np.zeros((st.padded_vertices, d_out), np.float32)
+        steps: List[Tuple[int, np.ndarray]] = []
+        for i in range(q):
+            for c in chunk_tile_row(st.row_tiles(i), chunk,
+                                    snake=(i % 2 == 1)):
+                steps.append((i, c))
+        if not steps:
+            return out[:st.num_vertices]
+        self._xcache = OrderedDict()
+
+        def flush(i, acc):
+            hb = np.asarray(acc)
+            self.stats.d2h_bytes += hb.nbytes
+            out[i * t:(i + 1) * t] = hb
+
+        staged = self._stage_chunk(steps[0][1], stream, None, chunk)
+        acc = None
+        res_dev = None
+        cur_row: Optional[int] = None
+        for s, (i, idx) in enumerate(steps):
+            payload, xs_dev = staged
+            if i != cur_row:
+                if cur_row is not None:
+                    flush(cur_row, acc)
+                acc = jnp.zeros((t, d_out), jnp.float32)
+                hb = self._interval(resident, i)
+                self.stats.h2d_x_bytes += hb.nbytes
+                self.stats.x_loads += 1
+                res_dev = jax.device_put(hb)
+                cur_row = i
+            if self.double_buffer and s + 1 < len(steps):
+                staged = self._stage_chunk(steps[s + 1][1], stream, None,
+                                           chunk)
+            if self.tile_format == "packed":
+                rows, cols, vals = payload
+                acc = _packed_step_gated(acc, rows, cols, vals, xs_dev,
+                                         res_dev, mode=mode)
+            else:
+                acc = _chunk_step_gated(acc, payload, xs_dev, res_dev,
+                                        mode=mode)
+            self.stats.steps += 1
+            if not self.double_buffer and s + 1 < len(steps):
+                jax.block_until_ready(acc)
+                staged = self._stage_chunk(steps[s + 1][1], stream, None,
+                                           chunk)
+        flush(cur_row, acc)
+        return out[:st.num_vertices]
+
     def _tile_part(self, blk_dev, x_dev, op: str):
         if self.tile_format == "packed":
             from repro.kernels.rer_gather import ops as gather_ops
@@ -953,6 +1268,93 @@ def make_streamed_aggregate(ex: TiledExecutor, op: str) -> Callable:
         fn = agg_max
     ex._diff_cache[op] = fn
     return fn
+
+
+def make_streamed_typed_sum(ex: TiledExecutor) -> Callable:
+    """Differentiable relation-typed streamed sum (DESIGN.md C10): the
+    input is the (N, R*H) stack of per-relation messages (e.g. R-GCN's
+    x @ W_r for every r), each typed tile consumes its own relation's
+    slice, and the output is the plain (N, H) sum over all typed edges.
+    Backward re-streams the TRANSPOSED typed tiles with `rel` riding
+    each tile unchanged and scatters partials into the stacked
+    cotangent — so per-relation weight gradients flow out-of-core with
+    no edge-shaped residuals (like the untyped sum, the adjacency is a
+    constant)."""
+    if ex.store.block_rel is None:
+        raise ValueError("typed streamed sum needs a relation-typed "
+                         "tile store")
+    fn = ex._diff_cache.get("typed_sum")
+    if fn is not None:
+        return fn
+    n = ex.store.num_vertices
+    r = ex.store.num_relations
+
+    def _np(a):
+        return np.ascontiguousarray(np.asarray(a, np.float32))
+
+    @jax.custom_vjp
+    def agg_typed(x):
+        h = x.shape[1] // r
+        return jax.pure_callback(
+            lambda xh: ex.aggregate(_np(xh), "sum", order="column",
+                                    rel_channels=h),
+            jax.ShapeDtypeStruct((n, h), jnp.float32), x)
+
+    agg_typed.defvjp(
+        lambda x: (agg_typed(x), None),
+        lambda _, g: (jax.pure_callback(
+            lambda gh: ex.typed_sum_vjp(_np(gh)),
+            jax.ShapeDtypeStruct((n, r * g.shape[1]), jnp.float32),
+            g),))
+    ex._diff_cache["typed_sum"] = agg_typed
+    return agg_typed
+
+
+def make_streamed_gated(ex: TiledExecutor) -> Callable:
+    """Differentiable streamed gated sum (Eq. 4, DESIGN.md C10):
+    `gated(ph, pc, x)` with ph = x @ W_H (dst-side gate input),
+    pc = x @ W_C, returns sum_e val * sigma(ph[dst] + pc[src]) * x[src].
+    The projections stay traced outside the callback, so W_H / W_C
+    gradients flow through XLA's matmul VJP; the callback's own VJP is
+    two recompute sweeps (`TiledExecutor.gated_vjp`) that rebuild the
+    gate activations tile-by-tile instead of keeping edge-shaped
+    residuals resident — the same recompute discipline as the streamed
+    max."""
+    fn = ex._diff_cache.get("gated")
+    if fn is not None:
+        return fn
+    n = ex.store.num_vertices
+
+    def _np(a):
+        return np.ascontiguousarray(np.asarray(a, np.float32))
+
+    def _shape(d):
+        return jax.ShapeDtypeStruct((n, d), jnp.float32)
+
+    def _host_fwd(ph, pc, x):
+        return ex.gated_aggregate(_np(ph), _np(pc), _np(x))
+
+    def _host_bwd(ph, pc, x, g):
+        return ex.gated_vjp(_np(ph), _np(pc), _np(x), _np(g))
+
+    @jax.custom_vjp
+    def gated(ph, pc, x):
+        return jax.pure_callback(_host_fwd, _shape(x.shape[1]),
+                                 ph, pc, x)
+
+    def gated_fwd(ph, pc, x):
+        return gated(ph, pc, x), (ph, pc, x)
+
+    def gated_bwd(res, g):
+        ph, pc, x = res
+        f = x.shape[1]
+        return jax.pure_callback(_host_bwd,
+                                 (_shape(f), _shape(f), _shape(f)),
+                                 ph, pc, x, g)
+
+    gated.defvjp(gated_fwd, gated_bwd)
+    ex._diff_cache["gated"] = gated
+    return gated
 
 
 @jax.jit

@@ -83,6 +83,8 @@ class CSRGraph:
     indptr: np.ndarray    # (N+1,) int64
     indices: np.ndarray   # (E,) int32 — source vertex ids
     val: np.ndarray       # (E,) float32
+    rel: Optional[np.ndarray] = None   # (E,) int32 edge types, if typed
+    num_relations: int = 1
 
 
 def coo_to_csr(g: COOGraph) -> CSRGraph:
@@ -90,10 +92,12 @@ def coo_to_csr(g: COOGraph) -> CSRGraph:
     dst = g.dst[order]
     indices = g.src[order].astype(np.int32)
     val = g.weights()[order]
+    rel = g.rel[order].astype(np.int32) if g.rel is not None else None
     indptr = np.zeros(g.num_vertices + 1, np.int64)
     np.add.at(indptr, dst + 1, 1)
     indptr = np.cumsum(indptr)
-    return CSRGraph(g.num_vertices, indptr, indices, val)
+    return CSRGraph(g.num_vertices, indptr, indices, val,
+                    rel=rel, num_relations=int(g.num_relations))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,7 +13,7 @@ per-column indexes the streaming schedules walk.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -113,6 +113,14 @@ class EdgeTileStore:
 
     `in_counts` is the per-destination in-edge count (mean aggregation
     divides by it after the streamed sum).
+
+    Relation-typed graphs (num_relations > 1) split each (i, j) grid
+    cell into one tile *per edge type present*: every entry of a tile
+    shares the tile's `block_rel`, so a staged chunk carries one rel id
+    per tile and the executor can select the relation-specific slice of
+    a stacked (T, R*D) source payload with a plain gather — no per-edge
+    rel column needs to ride the inner loop.  Untyped stores keep
+    `block_rel` None and behave exactly as before.
     """
     num_vertices: int
     tile: int
@@ -128,6 +136,8 @@ class EdgeTileStore:
     _row_order: np.ndarray          # tiles sorted (row, col)
     _col_ptr: np.ndarray            # (q+1,) indices into _col_order
     _col_order: np.ndarray          # tiles sorted (col, row)
+    block_rel: Optional[np.ndarray] = None   # (nnzb,) int32 tile edge type
+    num_relations: int = 1
 
     @property
     def nnzb(self) -> int:
@@ -138,9 +148,10 @@ class EdgeTileStore:
         return self.q * self.tile
 
     def nbytes(self) -> int:
+        rel = self.block_rel.nbytes if self.block_rel is not None else 0
         return int(self.edge_li.nbytes + self.edge_lj.nbytes
                    + self.edge_w.nbytes + self.edge_ptr.nbytes
-                   + self.block_row.nbytes + self.block_col.nbytes)
+                   + self.block_row.nbytes + self.block_col.nbytes + rel)
 
     def row_tiles(self, i: int) -> np.ndarray:
         return self._row_order[self._row_ptr[i]:self._row_ptr[i + 1]]
@@ -188,7 +199,8 @@ def transpose_tile_store(store: EdgeTileStore) -> EdgeTileStore:
         _out_counts(store.num_vertices, store.tile, store.block_col,
                     store.edge_ptr, store.edge_lj),
         store._col_ptr, store._col_order, store._row_ptr,
-        store._row_order)
+        store._row_order,
+        block_rel=store.block_rel, num_relations=store.num_relations)
 
 
 def transpose_packed_store(ps: PackedTileStore) -> PackedTileStore:
@@ -203,7 +215,8 @@ def transpose_packed_store(ps: PackedTileStore) -> PackedTileStore:
         ps.block_col, ps.block_row, ps.entry_ptr,
         ps.col_local, ps.row_local, ps.val,
         _out_counts(ps.num_vertices, ps.tile, ps.block_col,
-                    ps.entry_ptr, ps.col_local))
+                    ps.entry_ptr, ps.col_local),
+        block_rel=ps.block_rel, num_relations=ps.num_relations)
 
 
 def pow2_bucket(n: int, floor: int = 8) -> int:
@@ -249,6 +262,8 @@ class PackedTileStore:
     col_local: np.ndarray           # (M,) int32 src offset within tile
     val: np.ndarray                 # (M,) float32 merged edge weight
     in_counts: np.ndarray           # (N,) float32 in-edge counts
+    block_rel: Optional[np.ndarray] = None   # (nnzb,) int32 tile edge type
+    num_relations: int = 1
 
     @property
     def nnzb(self) -> int:
@@ -298,9 +313,10 @@ class PackedTileStore:
         return float(self.nnz) / (self.nnzb * self.tile * self.tile)
 
     def nbytes(self) -> int:
+        rel = self.block_rel.nbytes if self.block_rel is not None else 0
         return int(self.row_local.nbytes + self.col_local.nbytes
                    + self.val.nbytes + self.entry_ptr.nbytes
-                   + self.block_row.nbytes + self.block_col.nbytes)
+                   + self.block_row.nbytes + self.block_col.nbytes + rel)
 
     def pack(self, tiles, width: int, bucket: int
              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -362,7 +378,8 @@ def pack_tile_store(store: EdgeTileStore) -> PackedTileStore:
         ((ku // t) % t).astype(np.int32),
         (ku % t).astype(np.int32),
         val,
-        store.in_counts)
+        store.in_counts,
+        block_rel=store.block_rel, num_relations=store.num_relations)
 
 
 def _tile_index(keys: np.ndarray, q: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -374,19 +391,33 @@ def _tile_index(keys: np.ndarray, q: int) -> Tuple[np.ndarray, np.ndarray]:
 
 def build_tile_store(g: COOGraph, tile: int) -> EdgeTileStore:
     """Partition a COO graph into the host-side streaming tile store:
-    one argsort of the edge list by tile key — O(E log E), O(E) bytes."""
+    one argsort of the edge list by tile key — O(E log E), O(E) bytes.
+
+    Typed graphs (g.rel set with num_relations > 1) extend the tile key
+    with the edge's relation id, so a grid cell with R edge types
+    becomes up to R adjacent tiles sharing (block_row, block_col) but
+    each carrying a single `block_rel`.  The row/column indexes group by
+    block_row / block_col only, so the streaming sweeps are oblivious to
+    the split — a typed cell just contributes a few more tiles to its
+    interval's chunk list."""
     t = tile
     q = -(-g.num_vertices // t)
     bi = (g.dst // t).astype(np.int64)
     bj = (g.src // t).astype(np.int64)
-    key = bi * q + bj
+    typed = g.rel is not None and g.num_relations > 1
+    r = int(g.num_relations) if typed else 1
+    key = (bi * q + bj) * r
+    if typed:
+        key = key + g.rel.astype(np.int64)
     order = np.argsort(key, kind="stable")
     key_sorted = key[order]
     uniq, ptr_starts = np.unique(key_sorted, return_index=True)
     edge_ptr = np.concatenate([ptr_starts,
                                [key_sorted.size]]).astype(np.int64)
-    block_row = (uniq // q).astype(np.int32)
-    block_col = (uniq % q).astype(np.int32)
+    cell = uniq // r
+    block_row = (cell // q).astype(np.int32)
+    block_col = (cell % q).astype(np.int32)
+    block_rel = (uniq % r).astype(np.int32) if typed else None
     row = block_row.astype(np.int64)
     col = block_col.astype(np.int64)
     row_ptr, row_order = _tile_index(row * q + col, q)
@@ -397,7 +428,8 @@ def build_tile_store(g: COOGraph, tile: int) -> EdgeTileStore:
         (g.dst[order] % t).astype(np.int32),
         (g.src[order] % t).astype(np.int32),
         g.weights()[order].astype(np.float32),
-        counts, row_ptr, row_order, col_ptr, col_order)
+        counts, row_ptr, row_order, col_ptr, col_order,
+        block_rel=block_rel, num_relations=r)
 
 
 def chunk_tile_row(tiles: Sequence[int], chunk: int,

@@ -71,10 +71,12 @@ class SubgraphExtractor:
 
     def _in_edges(self, dsts: np.ndarray, fanout: Optional[int],
                   rng: Optional[np.random.Generator]):
-        """In-edges of `dsts` as (src, dst, val).  With `fanout`, vertices
-        whose in-degree exceeds it get `fanout` neighbours sampled with
-        replacement; everyone else keeps the exact neighbourhood."""
+        """In-edges of `dsts` as (src, dst, val, rel).  With `fanout`,
+        vertices whose in-degree exceeds it get `fanout` neighbours
+        sampled with replacement; everyone else keeps the exact
+        neighbourhood.  `rel` is None on untyped graphs."""
         indptr, indices, val = self.csr.indptr, self.csr.indices, self.csr.val
+        rel = self.csr.rel
         if fanout is None:
             pos, rep_dst = self._edge_positions_all(dsts)
         else:
@@ -92,8 +94,10 @@ class SubgraphExtractor:
                     [rep_dst, np.repeat(big, fanout).astype(np.int32)])
         if pos.size == 0:
             z = np.zeros(0, np.int32)
-            return z, z, np.zeros(0, np.float32)
-        return indices[pos].astype(np.int32), rep_dst, val[pos]
+            return z, z, np.zeros(0, np.float32), (
+                z if rel is not None else None)
+        return (indices[pos].astype(np.int32), rep_dst, val[pos],
+                rel[pos].astype(np.int32) if rel is not None else None)
 
     def extract(self, seeds: Sequence[int], num_hops: int,
                 fanout: Optional[int] = None,
@@ -112,15 +116,17 @@ class SubgraphExtractor:
         visited = np.zeros(self.g.num_vertices, bool)
         visited[seeds] = True
         order = [seeds]                                  # BFS level sets
-        edges_src, edges_dst, edges_val = [], [], []
+        edges_src, edges_dst, edges_val, edges_rel = [], [], [], []
         frontier = seeds
         for _ in range(num_hops):
             if frontier.size == 0:
                 break
-            s, d, v = self._in_edges(frontier, fanout, rng)
+            s, d, v, r = self._in_edges(frontier, fanout, rng)
             edges_src.append(s)
             edges_dst.append(d)
             edges_val.append(v)
+            if r is not None:
+                edges_rel.append(r)
             new = np.unique(s[~visited[s]])
             visited[new] = True
             order.append(new)
@@ -135,8 +141,14 @@ class SubgraphExtractor:
                else np.zeros(0, np.int32))
         val = (np.concatenate(edges_val) if edges_val
                else np.zeros(0, np.float32))
+        typed = self.csr.rel is not None
+        rel = (np.concatenate(edges_rel) if edges_rel
+               else np.zeros(0, np.int32)) if typed else None
         sub = COOGraph(int(vertices.size), src, dst,
-                       val if self.g.val is not None else None)
+                       val if self.g.val is not None else None,
+                       rel=rel,
+                       num_relations=(self.csr.num_relations
+                                      if typed else 1))
         return Subgraph(sub, vertices, int(seeds.size))
 
 

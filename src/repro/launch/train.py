@@ -123,7 +123,19 @@ def build_gnn(*, model: str, dataset: str, backend: str, steps: int,
     gd_ref = prepare_graph(gn, teacher[0].cfg)
     y_true = jnp.argmax(apply_stack(teacher, tp, gd_ref, x), -1)
 
-    layers = make_gnn_stack(model, [f, hidden, classes], backend=backend)
+    num_rel = 1
+    if model == "rgcn":
+        # the bundled datasets are untyped: synthesise a deterministic
+        # 3-type edge colouring so the typed stage contract (relation
+        # tiles, per-relation weights) is exercised end to end
+        import dataclasses
+        import numpy as np
+        num_rel = 3
+        rel = ((gn.src.astype(np.int64) + gn.dst) % num_rel).astype(
+            np.int32)
+        gn = dataclasses.replace(gn, rel=rel, num_relations=num_rel)
+    layers = make_gnn_stack(model, [f, hidden, classes], backend=backend,
+                            num_relations=num_rel)
     for layer in layers:
         layer.cfg.ring_shards = ring_shards
         layer.cfg.device_budget_bytes = device_budget_bytes
@@ -200,7 +212,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS,
                     help="transformer architecture (LM mode)")
-    ap.add_argument("--gnn", choices=["gcn", "gs_pool", "grn"],
+    ap.add_argument("--gnn", choices=["gcn", "gs_pool", "rgcn",
+                                      "gated_gcn", "grn"],
                     help="GNN mode: train an EnGN stack instead of an LM")
     ap.add_argument("--gnn-backend", default="segment",
                     choices=["segment", "blocked", "fused", "ring",

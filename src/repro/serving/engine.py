@@ -16,7 +16,11 @@ layer uses sum aggregation; other ops fall back to exact eager execution.
 
 The model stack must use the "segment" aggregation backend: the engine
 feeds each layer a per-batch edge-list graph dict, and segment is the
-backend that consumes (src, dst, val) directly.
+backend that consumes (src, dst, val) directly.  Relation-typed graphs
+are first-class: the extractor carries per-edge `rel` through the CSR
+and into each subgraph, so R-GCN / Gated-GCN stacks (the C10 stage
+contract) serve, spill to the streamed tiled executor, and shard onto
+the ring exactly like the untyped models.
 
 Out-of-core guard (DESIGN.md C7): with `device_budget_bytes` set, a
 batch whose L-hop subgraph would not fit on device (hub seeds can pull
@@ -95,19 +99,6 @@ class GNNServingEngine:
                 f"serving requires segment-backend layers, got non-segment "
                 f"backend on {bad} (the engine feeds per-batch edge-list "
                 f"graph dicts that only the segment backend consumes)")
-        if config.device_budget_bytes:
-            # the tiled fallback streams through EnGNLayer's generic
-            # stage functions; models that override apply() wholesale
-            # (R-GCN's per-relation reduce, Gated-GCN's two-endpoint
-            # edge gate) cannot spill — fail at construction, not on
-            # the first hub-heavy batch
-            from repro.core.engn import EnGNLayer
-            untiled = [ly.name for ly in layers
-                       if type(ly).apply is not EnGNLayer.apply]
-            if untiled:
-                raise ValueError(
-                    f"device_budget_bytes is set but {untiled} override "
-                    f"apply() and cannot run via the tiled fallback")
         self.graph = graph
         self.x = np.asarray(x)
         self.layers = layers
@@ -205,6 +196,9 @@ class GNNServingEngine:
         if not self._can_bucket:
             gd = {"n": g.num_vertices, "src": jnp.asarray(g.src),
                   "dst": jnp.asarray(g.dst), "val": jnp.asarray(g.weights())}
+            if g.rel is not None:
+                gd["rel"] = jnp.asarray(g.rel)
+                gd["num_relations"] = g.num_relations
             y = xs
             for layer, p in zip(self.layers, self.params):
                 y = layer.apply(p, gd, jnp.asarray(y))
@@ -229,6 +223,13 @@ class GNNServingEngine:
         src[:g.num_edges] = g.src
         dst[:g.num_edges] = g.dst
         val[:g.num_edges] = g.weights()
+        rel = None
+        if g.rel is not None:
+            # padding edges are rel 0 at the dummy vertex: with weight 0
+            # they add nothing, and the typed in-trace normalisation only
+            # pollutes the dummy row the slice below discards
+            rel = np.zeros(e_pad, np.int32)
+            rel[:g.num_edges] = g.rel
         xf = np.zeros((n_pad, xs.shape[1]), np.float32)
         xf[:xs.shape[0]] = xs
 
@@ -239,11 +240,16 @@ class GNNServingEngine:
             self._compiled[key] = fn
             self.stats["compiles"] += 1
         y = np.asarray(fn(jnp.asarray(src), jnp.asarray(dst),
-                          jnp.asarray(val), jnp.asarray(xf)))
+                          jnp.asarray(val),
+                          jnp.asarray(rel) if rel is not None else None,
+                          jnp.asarray(xf)))
         return y[:sub.num_seeds]
 
-    def _stack_fn(self, n_pad, src, dst, val, xf):
+    def _stack_fn(self, n_pad, src, dst, val, rel, xf):
         gd = {"n": n_pad, "src": src, "dst": dst, "val": val}
+        if rel is not None:
+            gd["rel"] = rel
+            gd["num_relations"] = self.graph.num_relations
         y = xf
         for layer, p in zip(self.layers, self.params):
             y = layer.apply(p, gd, y)
@@ -266,9 +272,21 @@ class GNNServingEngine:
             n = max(_next_pow2(n + 1), 256)
             e = max(_next_pow2(max(e, 1)), 1024)
         return max(dense_footprint_bytes(
-            n, e, layer.cfg.in_dim, layer.cfg.out_dim, "segment",
-            training=False)
+            n, e, self._staged_feat_dim(layer), layer.cfg.out_dim,
+            "segment", training=False)
             for layer in self.layers)
+
+    @staticmethod
+    def _staged_feat_dim(layer) -> int:
+        """The widest per-vertex stream the layer stages (DESIGN.md
+        C10): typed models carry the (N, R*H) stacked payload, gated
+        ones the (pc || x) 2F stream — both wider than in_dim."""
+        f = layer.cfg.in_dim
+        if layer.cfg.stage_contract == "typed":
+            f = max(f, layer.cfg.num_relations * layer.cfg.out_dim)
+        elif layer.cfg.stage_contract == "gated":
+            f = max(f, 2 * layer.cfg.in_dim)
+        return f
 
     def _try_ring_plan(self, g: COOGraph):
         """Shard-aware footprint gate (DESIGN.md C2): price the actual
@@ -281,22 +299,33 @@ class GNNServingEngine:
         if not p:
             return None
         ops = {ly.cfg.aggregate_op for ly in self.layers}
-        if len(ops) != 1:
+        contracts = {ly.cfg.stage_contract for ly in self.layers}
+        if len(ops) != 1 or len(contracts) != 1:
             return None
+        contract = contracts.pop()
         from repro.core.dataflow import (build_packed_ring_shards,
                                          build_ring_tile_shards,
                                          ring_stripe_bytes)
-        from repro.core.engn import EnGNConfig, prepare_ring
+        from repro.core.engn import (EnGNConfig, fold_rel_norm,
+                                     prepare_ring)
         from repro.distributed.sharding import ring_mesh
         try:
             mesh = ring_mesh(p)
         except ValueError:
             return None                       # fewer devices than shards
+        # typed contract: fold the per-(dst, rel) normalisation into the
+        # edge weights BEFORE the plan build, so the stripes carry the
+        # normalised coefficients (prepare_ring is told not to re-fold)
+        rel_normed = False
+        if (g.rel is not None and g.num_relations > 1
+                and any(ly.cfg.rel_normalize for ly in self.layers)):
+            g = fold_rel_norm(g)
+            rel_normed = True
         # price both stripe carriers (dense tiles vs packed entries,
         # DESIGN.md C8) before building — an over-budget batch pays
         # nothing, and the cheaper format is built exactly once and
         # handed to prepare_ring (which then re-checks nothing twice)
-        dims = ([self.layers[0].cfg.in_dim]
+        dims = ([self._staged_feat_dim(self.layers[0])]
                 + [ly.cfg.out_dim for ly in self.layers])
         dense_b = ring_stripe_bytes(g, p, tile=self.config.ring_tile,
                                     in_dim=max(dims), out_dim=max(dims),
@@ -315,8 +344,14 @@ class GNNServingEngine:
         cfg = EnGNConfig(in_dim=self.layers[0].cfg.in_dim,
                          out_dim=self.layers[-1].cfg.out_dim,
                          aggregate_op=ops.pop(), backend="ring",
-                         tile=self.config.ring_tile, ring_shards=p)
-        return prepare_ring(g, cfg, plan=plan, mesh=mesh)
+                         tile=self.config.ring_tile, ring_shards=p,
+                         stage_contract=contract,
+                         num_relations=max(ly.cfg.num_relations
+                                           for ly in self.layers),
+                         rel_normalize=any(ly.cfg.rel_normalize
+                                           for ly in self.layers))
+        return prepare_ring(g, cfg, plan=plan, mesh=mesh,
+                            rel_normed=rel_normed)
 
     def _run_subgraph_ring(self, sub, xs: np.ndarray, gd) -> np.ndarray:
         """Run the stack over the subgraph on the ring mesh: each device
@@ -337,7 +372,13 @@ class GNNServingEngine:
         sparse edge lists (layer jit caches are shared across batches,
         so only the store build recurs)."""
         g = sub.graph
-        dims = ([self.layers[0].cfg.in_dim]
+        if (g.rel is not None and g.num_relations > 1
+                and any(ly.cfg.rel_normalize for ly in self.layers)):
+            # typed sums stream as plain sums: the per-(dst, rel) mean
+            # is folded into the tile weights before the store build
+            from repro.core.engn import fold_rel_norm
+            g = fold_rel_norm(g)
+        dims = ([self._staged_feat_dim(layer) for layer in self.layers]
                 + [layer.cfg.out_dim for layer in self.layers])
         ex = TiledExecutor(g, tile=self.config.tiled_tile,
                            budget_bytes=self.config.device_budget_bytes,

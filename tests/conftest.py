@@ -1,0 +1,23 @@
+"""Force a multi-device host view for the whole suite.
+
+Two reasons, both load-bearing on small CI machines:
+
+- the ring/mesh tests shard over ``min(len(jax.devices()), 8)`` and
+  only exercise real collectives under a multi-device view;
+- XLA:CPU cannot re-enter itself from a host callback when the host
+  has a single execution lane: a jitted program with compute around a
+  ``pure_callback`` deadlocks while the streamed TiledExecutor sweep
+  inside the callback (DESIGN.md C9/C10) waits for the core the outer
+  program holds.  Forcing several host devices gives the nested
+  dispatch its own lane, matching how the CPU launchers already run
+  (launch/train.py documents the flag; launch/dryrun.py forces 512).
+
+This must run before jax initialises its backends, hence conftest and
+not a fixture.  An explicit user-provided device count is respected.
+"""
+import os
+
+_FLAG = "--xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FLAG + "=8").strip()

@@ -1,9 +1,13 @@
-"""Unified cross-backend equivalence matrix (ISSUE 5): every
+"""Unified cross-backend equivalence matrix (ISSUE 5 + 6): every
 aggregation backend (blocked / streamed tiled / sharded ring) x tile
 format (dense / packed) x op (sum / max / mean) x graph shape (even /
 uneven / empty-tile) against the segment reference, bitwise on
 integer-weighted deduplicated graphs (small-int fp32 sums are exact in
-any reduction order).
+any reduction order) — and, since ISSUE 6, x model: the staged-contract
+models (R-GCN's relation-typed sum, Gated-GCN's two-endpoint gate,
+DESIGN.md C10) run on every one of those backends against their
+device-resident dense numpy oracles, with the raw typed sum additionally
+checked bit-for-bit.
 
 Consolidates the parity properties formerly scattered across
 test_tiled_exec.py, test_packed_tiles.py and test_ring_dataflow.py into
@@ -16,6 +20,8 @@ Also hosts the `_hypothesis_fallback` seeding contract the property
 sweep below relies on (per-test derived RNG, reproducible across
 pytest workers).
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -28,6 +34,7 @@ except ImportError:                     # clean checkout: vendored fallback
 
 from repro.core.engn import (EnGNConfig, EnGNLayer, prepare_graph,
                              segment_aggregate)
+from repro.core.models import GatedGCNLayer, RGCNLayer
 from repro.core.tiled import TiledExecutor
 from repro.graphs.format import COOGraph
 from repro.graphs.generate import rmat_graph
@@ -182,6 +189,187 @@ def test_property_ring_matches_segment(n, e, seed, tile, op, fmt):
         np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
     else:
         assert np.array_equal(got, want), (op, fmt, RING_SHARDS, tile)
+
+
+# ------------------------------------------- backend x model (ISSUE 6)
+RELS = 3
+HID = 5
+
+
+def _typed_int_graph(n, e, seed, collide=False):
+    """Relation-typed integer graph: rel = (src + dst) % RELS is
+    deterministic, so the base edges are unique per (src, dst, rel).
+    With `collide`, a quarter of the edges are duplicated under the
+    *next* relation — the same adjacency cell under two types, which
+    the typed carriers (tile key, packed ring merge) must keep apart."""
+    g = _int_graph(n, e, seed)
+    src, dst, val = g.src, g.dst, g.val
+    rel = ((src.astype(np.int64) + dst) % RELS).astype(np.int32)
+    if collide:
+        k = max(1, src.size // 4)
+        src = np.concatenate([src, src[:k]])
+        dst = np.concatenate([dst, dst[:k]])
+        val = np.concatenate([val, np.full(k, 2.0, np.float32)])
+        rel = np.concatenate([rel, (rel[:k] + 1) % RELS])
+    return COOGraph(n, src, dst, val, rel, RELS)
+
+
+_TYPED_SPECS = {
+    "even": (96, 500, 0, False),
+    "uneven": (101, 600, 1, False),
+    "empty_tile": (64, 3, 2, False),
+    "collision": (64, 400, 3, True),
+}
+_TYPED_CACHE = {}
+
+
+def _typed_graph(kind):
+    if kind not in _TYPED_CACHE:
+        n, e, seed, collide = _TYPED_SPECS[kind]
+        _TYPED_CACHE[kind] = (_typed_int_graph(n, e, seed, collide),
+                              _int_features(n, DIM, seed))
+    return _TYPED_CACHE[kind]
+
+
+def _model_layer(model, backend, fmt):
+    cfg = EnGNConfig(in_dim=DIM, out_dim=HID, backend=backend,
+                     tile=(4 if backend == "ring" else TILE),
+                     tile_format=fmt,
+                     ring_shards=(RING_SHARDS if backend == "ring"
+                                  else None))
+    if model == "rgcn":
+        return RGCNLayer(cfg, RELS)
+    return GatedGCNLayer(cfg)
+
+
+def _model_params(model):
+    return _model_layer(model, "segment", "dense").init(jax.random.key(11))
+
+
+def _rgcn_oracle(g, x, params):
+    """h' = ReLU(W0 x + sum_r sum_{j in N_r(i)} (val/|N_r(i)|) W_r x_j)."""
+    acc = x @ np.asarray(params["w0"])
+    wr = np.asarray(params["wr"])
+    cnt = np.zeros((g.num_vertices, RELS), np.int64)
+    for d, r in zip(g.dst, g.rel):
+        cnt[d, r] += 1
+    for s, d, r, v in zip(g.src, g.dst, g.rel, g.weights()):
+        acc[d] += v * (x[s] @ wr[r]) / cnt[d, r]
+    return np.maximum(acc, 0.0)
+
+
+def _gated_oracle(g, x, params):
+    """h' = ReLU((sum_u val . sigmoid(W_H h_v + W_C h_u) . h_u) W)."""
+    ph = x @ np.asarray(params["w_h"])
+    pc = x @ np.asarray(params["w_c"])
+    agg = np.zeros_like(x)
+    for s, d, v in zip(g.src, g.dst, g.weights()):
+        eta = 1.0 / (1.0 + np.exp(-(ph[d] + pc[s])))
+        agg[d] += v * eta * x[s]
+    return np.maximum(agg @ np.asarray(params["w"]), 0.0)
+
+
+_ORACLES = {"rgcn": _rgcn_oracle, "gated_gcn": _gated_oracle}
+
+
+@pytest.mark.parametrize("kind", sorted(_TYPED_SPECS))
+@pytest.mark.parametrize("fmt", ["dense", "packed"])
+@pytest.mark.parametrize("backend", ["blocked", "tiled", "ring"])
+@pytest.mark.parametrize("model", ["rgcn", "gated_gcn"])
+def test_model_backend_matrix_matches_dense_oracle(model, backend, fmt,
+                                                   kind):
+    """The ISSUE 6 matrix: each staged model on each tile-carrying
+    backend and format equals its dense numpy oracle (fp tolerance —
+    the cells contain sigmoids / normalisations, so bitwise equality is
+    reserved for the raw typed-sum probe below)."""
+    g, x = _typed_graph(kind)
+    layer = _model_layer(model, backend, fmt)
+    params = _model_params(model)
+    gd = prepare_graph(g, layer.cfg)
+    meta = (gd.get("blocks_meta") or gd.get("ring_meta")
+            or gd.get("tiled_meta"))
+    assert meta["tile_format"] == fmt, (backend, fmt, meta["tile_format"])
+    got = np.asarray(layer.apply(params, gd, jnp.asarray(x)))
+    want = _ORACLES[model](g, x, params)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class _TypedSumProbe(RGCNLayer):
+    """R-GCN stripped to its raw relation-typed sum: no per-(dst, rel)
+    normalisation and an identity update, so integer weights and
+    features make every backend's typed aggregate exactly representable
+    — the matrix can insist on bit-for-bit equality."""
+
+    def __init__(self, cfg, rels):
+        super().__init__(cfg, rels)
+        self.cfg = dataclasses.replace(self.cfg, rel_normalize=False)
+
+    def stage_spec(self):
+        return {"kind": "typed", "num_relations": self.num_relations,
+                "channels": self.cfg.out_dim, "normalize": False}
+
+    def update(self, params, x_self, agg):
+        return agg
+
+
+def _typed_probe(backend, fmt):
+    cfg = EnGNConfig(in_dim=DIM, out_dim=HID, backend=backend,
+                     tile=(4 if backend == "ring" else TILE),
+                     tile_format=fmt,
+                     ring_shards=(RING_SHARDS if backend == "ring"
+                                  else None))
+    return _TypedSumProbe(cfg, RELS)
+
+
+def _int_typed_params(seed=0):
+    rng = np.random.default_rng(seed + 23)
+    return {"w0": jnp.zeros((DIM, HID), jnp.float32),
+            "wr": jnp.asarray(rng.integers(-2, 3, (RELS, DIM, HID))
+                              .astype(np.float32))}
+
+
+@pytest.mark.parametrize("kind", sorted(_TYPED_SPECS))
+@pytest.mark.parametrize("fmt", ["dense", "packed"])
+@pytest.mark.parametrize("backend", ["blocked", "tiled", "ring"])
+def test_typed_sum_matrix_bitwise(backend, fmt, kind):
+    """sum_r A_r X W_r with integer weights/features/projections: exact
+    in fp32 under any reduction order, so blocked / tiled / ring typed
+    carriers must match the segment reference bit-for-bit."""
+    g, x = _typed_graph(kind)
+    params = _int_typed_params()
+    seg = _typed_probe("segment", fmt)
+    want = np.asarray(seg.apply(params, prepare_graph(g, seg.cfg),
+                                jnp.asarray(x)))
+    probe = _typed_probe(backend, fmt)
+    got = np.asarray(probe.apply(params, prepare_graph(g, probe.cfg),
+                                 jnp.asarray(x)))
+    assert np.array_equal(got, want), (backend, fmt, kind)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(8, 100), e=st.integers(1, 500),
+       seed=st.integers(0, 5), tile=st.integers(4, 20),
+       fmt=st.sampled_from(["dense", "packed"]),
+       backend=st.sampled_from(["blocked", "tiled", "ring"]),
+       collide=st.booleans())
+def test_property_typed_sum_matches_segment(n, e, seed, tile, fmt,
+                                            backend, collide):
+    """Random typed draws — ragged vertex splits, nearly-empty grids,
+    multi-relation collisions — against the segment reference,
+    bitwise."""
+    g = _typed_int_graph(n, e, seed, collide=collide)
+    x = _int_features(n, DIM, seed)
+    params = _int_typed_params(seed)
+    seg = _typed_probe("segment", fmt)
+    want = np.asarray(seg.apply(params, prepare_graph(g, seg.cfg),
+                                jnp.asarray(x)))
+    cfg = dataclasses.replace(_typed_probe(backend, fmt).cfg,
+                              tile=(min(tile, 8) if backend == "ring"
+                                    else tile))
+    probe = _TypedSumProbe(cfg, RELS)
+    got = np.asarray(probe.apply(params, prepare_graph(g, probe.cfg),
+                                 jnp.asarray(x)))
+    assert np.array_equal(got, want), (backend, fmt, tile, collide)
 
 
 # ---------------------------------------------------- fallback seeding

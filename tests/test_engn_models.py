@@ -4,9 +4,11 @@ agreement (segment vs tiled Pallas)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.core.engn import EnGNConfig, prepare_graph, segment_aggregate
-from repro.core.models import (RGCNLayer, make_gnn, make_gnn_stack,
+from repro.core.models import (GatedGCNLayer, GSPoolLayer, RGCNLayer,
+                               make_gnn, make_gnn_stack,
                                init_stack, apply_stack)
 from repro.graphs.format import COOGraph
 from repro.graphs.generate import rmat_graph, random_features
@@ -187,6 +189,35 @@ def test_grn_matches_dense_oracle():
                  (r * x) @ np.asarray(params["u_n"]))
     want = (1 - z) * nh + z * x
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------- config / contract hygiene
+def test_layer_init_does_not_mutate_shared_config():
+    """Constructors copy-on-configure: a cfg shared across layers (or
+    reused by the caller) must come back untouched."""
+    cfg = EnGNConfig(8, 8)
+    GatedGCNLayer(cfg)
+    GSPoolLayer(cfg)
+    RGCNLayer(cfg, 3)
+    assert cfg.stage_order == "auto"
+    assert cfg.aggregate_op == "sum"
+    assert cfg.stage_contract is None
+    assert cfg.num_relations == 1
+    assert cfg.rel_normalize is False
+
+
+def test_staged_models_reject_custom_aggregate_fn():
+    """A custom reduce cannot see the typed/gated message structure —
+    the layer must refuse loudly instead of silently ignoring it."""
+    rels = 2
+    g = _graph(20, 80, seed=13, weighted=False, rels=rels)
+    x = jnp.asarray(random_features(g.num_vertices, 6, seed=10))
+    for layer in (make_gnn("rgcn", 6, 4, num_relations=rels),
+                  make_gnn("gated_gcn", 6, 4)):
+        gd = prepare_graph(g, layer.cfg)
+        params = layer.init(jax.random.key(9))
+        with pytest.raises(ValueError, match="aggregate_fn"):
+            layer.apply(params, gd, x, aggregate_fn=lambda v: v)
 
 
 # ---------------------------------------------------------------- stacks
