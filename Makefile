@@ -1,11 +1,15 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test bench bench-packed serve-example dev-deps
+.PHONY: check check-docs test bench bench-packed serve-example dev-deps
 
 # tier-1 gate — run on every PR (see .github/workflows/ci.yml)
 check:
 	$(PYTHON) -m pytest -x -q
+
+# docs gate: markdown links + the DESIGN.md stable-anchor contract
+check-docs:
+	$(PYTHON) tools/check_docs.py
 
 test: check
 
@@ -13,7 +17,7 @@ bench:
 	$(PYTHON) -m benchmarks.run
 
 # the packed-tile perf story only (C8): streamed + blocked + ring
-# packed-vs-dense rows (+ the C9 train-step rows), BENCH_5.json summary
+# packed-vs-dense rows (+ the C9 train-step rows), BENCH_7.json summary
 bench-packed:
 	$(PYTHON) -m benchmarks.run --only tiled,ring_tiled
 

@@ -1,8 +1,10 @@
-"""Tiled out-of-core executor (S5 / C7 / C8 / C9) — end-to-end
+"""Tiled out-of-core executor (S5 / C7 / C8 / C9 / C11) — end-to-end
 streamed vs dense throughput, packed vs dense tile format (speedup,
 fill factor, parity), transfer/compute overlap from double buffering,
-the streamed traffic counters, and the train-step row (fwd+bwd through
-the streamed VJP vs the dense-blocked backend) across Table-5 dataset
+the streamed traffic counters, the train-step row (fwd+bwd through
+the streamed VJP vs the dense-blocked backend), chunk-queue vs
+callback-loop streaming (stream + train step), and int8 vs fp32 tile
+values (H2D compression + accuracy envelope) across Table-5 dataset
 sizes."""
 from __future__ import annotations
 
@@ -184,6 +186,67 @@ def run():
         emit(f"tiled/{ds}/train_blocked_us", round(t_btrain, 1),
              f"device-resident fwd+bwd, streamed/blocked="
              f"{t_train / max(t_btrain, 1.0):.2f}x")
+
+        # chunk-queue vs callback-loop (C11): the same packed stream,
+        # once staged device-resident and swept with zero host round
+        # trips, once streamed per chunk through the pure_callback loop
+        xq = random_features(g.num_vertices, HIDDEN, seed=6)
+        q_ex = TiledExecutor(gn, tile=256, chunk=8, tile_format="packed",
+                             streaming_mode="auto")
+        cb_ex = TiledExecutor(gn, tile=256, chunk=8,
+                              tile_format="packed",
+                              streaming_mode="callback")
+        assert q_ex.queue_plan(HIDDEN, "sum") is not None
+        q_ex.aggregate(xq, "sum")                # stage + warm
+        cb_ex.aggregate(xq, "sum")
+        t_q = _layer_time_us(lambda: q_ex.aggregate(xq, "sum"))
+        t_cb = _layer_time_us(lambda: cb_ex.aggregate(xq, "sum"))
+        qs = q_ex.stats
+        emit(f"tiled/{ds}/queue_stream_us", round(t_q, 1),
+             f"slabs={qs.queue_steps} launches={qs.queue_launches} "
+             f"queue_mb={qs.queue_h2d_bytes / 1e6:.2f} (staged once)")
+        emit(f"tiled/{ds}/callback_stream_us", round(t_cb, 1),
+             f"steps={cb_ex.stats.steps} per-chunk host round trips")
+        emit(f"tiled/{ds}/queue_vs_callback_speedup",
+             round(t_cb / max(t_q, 1.0), 3),
+             f"queue={t_q:.0f}us callback={t_cb:.0f}us")
+
+        # train-step with the callback loop pinned — the denominator of
+        # the C11 acceptance (the auto train row above rides the queue)
+        cb_layer = make_gnn("gcn", f, HIDDEN, backend="tiled", tile=256)
+        cb_layer.cfg.device_budget_bytes = budget
+        cb_layer.cfg.training = True
+        cb_layer.cfg.streaming_mode = "callback"
+        gcb = prepare_graph(gn, cb_layer.cfg)
+
+        def cb_loss(p, xx):
+            return jnp.sum(cb_layer.apply(p, gcb, xx) * coef)
+
+        cb_step = jax.jit(jax.value_and_grad(cb_loss, argnums=(0, 1)))
+        t_cbtrain = _median_us(cb_step, params_t, xj, iters=3)
+        emit(f"tiled/{ds}/train_fwdbwd_callback_us", round(t_cbtrain, 1),
+             "pinned callback loop (pre-C11 regime)")
+        emit(f"tiled/{ds}/train_queue_speedup",
+             round(t_cbtrain / max(t_train, 1.0), 3),
+             f"queue={t_train:.0f}us callback={t_cbtrain:.0f}us "
+             "(>= 2x is the ISSUE-7 gate)")
+
+        # int8 tile values (C11): quantised vs fp32 bytes on the value
+        # plane, and the documented accuracy envelope of the sum
+        i8_ex = TiledExecutor(gn, tile=256, chunk=8,
+                              tile_format="packed", value_dtype="int8")
+        y_i8 = i8_ex.aggregate(xq, "sum")
+        y_fp = q_ex.aggregate(xq, "sum")
+        s8 = i8_ex.stats
+        emit(f"tiled/{ds}/int8_value_compression",
+             round(s8.value_compression(), 4),
+             f"quant_val_b={s8.quant_val_bytes} "
+             f"raw_val_b={s8.raw_val_bytes}")
+        denom = np.maximum(np.abs(y_fp), 1.0)
+        rel = float(np.mean(np.abs(y_i8 - y_fp) / denom))
+        emit(f"tiled/{ds}/int8_parity_mean_relerr", f"{rel:.2e}",
+             "error-feedback int8 values vs fp32 queue sum")
+        assert rel < 0.02, f"int8 value quantisation drifted: {rel}"
 
         # overlap ablation: double-buffered streaming vs serialised
         # (aggregate at the hidden dim — the post-DASR streamed width)

@@ -7,19 +7,31 @@ bench-smoke job runs it and uploads the CSV as an artifact so the perf
 trajectory is recorded per PR.
 
 Emits ``name,value,derived`` CSV rows (also saved to
-experiments/bench_results.csv), plus a machine-readable ``BENCH_5.json``
+experiments/bench_results.csv), plus a machine-readable ``BENCH_7.json``
 summary — per-bench best throughput, the train-step (fwd+bwd) rows,
 packed-vs-dense speedups and the parity gates — so the perf trajectory
-can be diffed across PRs without parsing the CSV.  (BENCH_4.json is the
-committed snapshot of the previous PR's sweep.)
+can be diffed across PRs without parsing the CSV.  (BENCH_5.json is the
+committed snapshot of the previous PR's sweep; the schema is documented
+in docs/benchmarks.md.)
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 from pathlib import Path
+
+# Multi-device host view BEFORE any bench module imports jax — the same
+# 1-CPU host-callback deadlock workaround tests/conftest.py applies (a
+# jitted callback-loop bench on a single-lane XLA:CPU waits forever for
+# the core the outer program holds; see README "Tests").  An explicit
+# user-provided count is respected.
+_FLAG = "--xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FLAG + "=8").strip()
 
 from benchmarks import (bench_stage_breakdown, bench_edge_reorg,
                         bench_dim_sensitivity, bench_dasr, bench_tiling,
@@ -74,9 +86,9 @@ def main() -> int:
     print(f"# wrote {out}")
 
     summary = summarize(rows(), smoke=args.smoke)
-    Path("BENCH_5.json").write_text(json.dumps(summary, indent=2,
+    Path("BENCH_7.json").write_text(json.dumps(summary, indent=2,
                                                sort_keys=True) + "\n")
-    print("# wrote BENCH_5.json")
+    print("# wrote BENCH_7.json")
     return 0
 
 
@@ -100,12 +112,14 @@ def summarize(csv_rows, smoke: bool) -> dict:
             if value > best.get(bench, {}).get("value", 0.0):
                 best[bench] = {"row": name, "value": value}
     return {
-        "issue": 5,
+        "issue": 7,
         "smoke": smoke,
         "best_throughput": best,
         "train": {n: v for n, v, _ in parsed if "/train_" in n},
         "packed_vs_dense": {n: v for n, v, _ in parsed
                             if "packed_speedup" in n},
+        "queue": {n: v for n, v, _ in parsed
+                  if "queue" in n or "quant" in n},
         "parity": {n: v for n, v, _ in parsed if "parity" in n},
         "fill_factor": {n: v for n, v, _ in parsed
                         if "fill_factor" in n},

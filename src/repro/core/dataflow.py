@@ -300,14 +300,19 @@ def _ring_geometry(num_vertices: int, num_shards: int, tile: int):
 def ring_stripe_bytes(g: COOGraph, num_shards: int, tile: int = 256,
                       in_dim: int = 0, out_dim: int = 0,
                       tile_format: str = "dense",
-                      bucket_floor: int = 8) -> int:
+                      bucket_floor: int = 8,
+                      value_dtype: str = "fp32") -> int:
     """Exact per-shard device bytes of the ring plan for `g` — one
     O(E log E) binning pass, no tile densification.  Matches
     `RingTileShards.device_bytes()` (dense) or
     `PackedRingShards.device_bytes()` (packed), + `ring_feature_bytes`
     when dims are given, so gates can price a batch before paying the
     build; "auto" returns the cheaper of the two (the format
-    `prepare_ring` would pick)."""
+    `prepare_ring` would pick).  `value_dtype="int8"` prices the packed
+    stripes' value plane quantised — 9 B per entry slot plus one f32
+    scale per stripe (DESIGN.md C11); ring execution itself stays fp32,
+    this parameter only keeps budget comparisons honest against a
+    quantised tiled/blocked alternative."""
     p = num_shards
     t, q_loc, n_loc = _ring_geometry(g.num_vertices, p, tile)
     feat = ring_feature_bytes(n_loc, in_dim, out_dim)
@@ -330,7 +335,10 @@ def ring_stripe_bytes(g: COOGraph, num_shards: int, tile: int = 256,
         counts = np.bincount(pair, minlength=p * p)
         l_max = pow2_bucket(int(counts.max()) if counts.size else 0,
                             bucket_floor)
-        return int(12 * p * l_max + 4 * n_loc_p)
+        from repro.kernels.autotune import packed_entry_bytes
+        scale_b = 4 if value_dtype == "int8" else 0
+        return int(packed_entry_bytes(p * l_max, value_dtype)
+                   + scale_b * p + 4 * n_loc_p)
 
     if tile_format == "dense":
         return dense_bytes() + feat

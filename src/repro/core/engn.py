@@ -108,6 +108,18 @@ class EnGNConfig:
     device_budget_bytes: Optional[int] = None
     auto_spill: bool = True
     tiled_chunk: int = 8              # tiles per streamed device step
+    # How the tiled backend streams (DESIGN.md C11): "auto" stages the
+    # whole packed stream as a device-resident chunk queue when it fits
+    # the budget (zero per-chunk host round trips — the ~10x train-step
+    # win), falling back to the per-chunk callback loop; "callback"
+    # forces the loop; "chunk_queue" demands the queue or raises.
+    streaming_mode: str = "auto"
+    # "fp32" | "int8": int8 ships streamed tile values quantised with
+    # error feedback (distributed/compression.py) — 4x fewer value
+    # bytes per sweep, bounded per-sweep rounding error, unbiased in
+    # time average (DESIGN.md C11).  Applies to the tiled backend's
+    # packed staging and chunk queue.
+    tile_value_dtype: str = "fp32"
     # training=True prices the budget gate for forward AND backward
     # (cotangent twins double the activation terms; the streamed tiled
     # executor pre-sizes its step for the wider backward streams) —
@@ -531,6 +543,10 @@ class EnGNLayer:
                 # per-bucket-group loop (each launch pays dispatch)
                 from repro.kernels.rer_gather import ops as gather_ops
                 gsrc, gdst, gval = graph["packed_flat"]
+                scale = graph.get("packed_val_scale")
+                if scale is not None:
+                    # int8 residency (C11): dequantise in-trace
+                    gval = gval.astype(jnp.float32) * scale
                 y = gather_ops.packed_flat_xla(
                     gsrc, gdst, gval, xf, n=xf.shape[0], op=base_op)
                 return _finish(y)
@@ -624,7 +640,14 @@ def prepare_tiled(g: COOGraph, cfg: EnGNConfig,
                        budget_bytes=cfg.device_budget_bytes, impl=impl,
                        dim_hint=dim_hint,
                        tile_format=cfg.tile_format,
-                       bucket_floor=cfg.packed_bucket_floor)
+                       bucket_floor=cfg.packed_bucket_floor,
+                       streaming_mode=cfg.streaming_mode,
+                       value_dtype=(cfg.tile_value_dtype
+                                    if cfg.tile_format != "dense"
+                                    else "fp32"))
+    # which streaming regime this config/graph pair actually lands in
+    # (the plan is per feature dim; h is the layer's streamed width)
+    qplan = ex.queue_plan(max(cfg.in_dim, h), "sum")
     return {"n": g.num_vertices, "backend": "tiled", "tiled_exec": ex,
             "tiled_meta": {"q": ex.store.q, "tile": ex.store.tile,
                            "chunk": ex.chunk,
@@ -632,6 +655,10 @@ def prepare_tiled(g: COOGraph, cfg: EnGNConfig,
                            "host_bytes": ex.store.nbytes(),
                            "tile_format": ex.tile_format,
                            "format_choice": ex.format_choice,
+                           "streaming_mode": ex.streaming_mode,
+                           "value_dtype": ex.value_dtype,
+                           "queue_plan": (dataclasses.asdict(qplan)
+                                          if qplan else None),
                            # reverse path (C9): every tileable model
                            # can now train through the streamed
                            # executor via the custom_vjp wrapper
@@ -690,7 +717,8 @@ def prepare_ring(g: COOGraph, cfg: EnGNConfig,
                                         tile_format="dense")
             packed_b = ring_stripe_bytes(
                 g, p, tile=cfg.tile, tile_format="packed",
-                bucket_floor=cfg.packed_bucket_floor)
+                bucket_floor=cfg.packed_bucket_floor,
+                value_dtype=cfg.tile_value_dtype)
             fmt = "packed" if packed_b < dense_b else "dense"
         if fmt == "packed":
             plan = build_packed_ring_shards(
@@ -784,7 +812,8 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
                                      tile=cfg.tile,
                                      has_val=g.val is not None,
                                      tile_format=cfg.tile_format,
-                                     training=cfg.training)
+                                     training=cfg.training,
+                                     value_dtype=cfg.tile_value_dtype)
         if need > cfg.device_budget_bytes:
             if not cfg.auto_spill:
                 raise DeviceBudgetExceeded(
@@ -848,9 +877,29 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
                 if (gather_ops.default_impl() == "xla"
                         or cfg.stage_contract == "gated"):
                     flat = gather_ops.flat_entries(packed)
-                    d["packed_flat"] = tuple(jnp.asarray(a)
-                                             for a in flat)
-                    tile_bytes = sum(a.nbytes for a in flat)
+                    if (cfg.tile_value_dtype == "int8"
+                            and cfg.stage_contract != "gated"):
+                        # int8 residency (C11): the flat value plane
+                        # stays quantised on device (one f32 scale for
+                        # the whole graph — it is uploaded once, so
+                        # there is no re-streaming for error feedback
+                        # to correct) and dequantises in-trace in
+                        # _aggregate.  The gated contract keeps fp32:
+                        # its per-entry gate products compound the
+                        # rounding error.
+                        from repro.distributed.compression import (
+                            quantize_int8_np)
+                        qv, sc, _ = quantize_int8_np(flat[2])
+                        d["packed_flat"] = (jnp.asarray(flat[0]),
+                                            jnp.asarray(flat[1]),
+                                            jnp.asarray(qv))
+                        d["packed_val_scale"] = sc
+                        tile_bytes = (flat[0].nbytes + flat[1].nbytes
+                                      + qv.nbytes + 4)
+                    else:
+                        d["packed_flat"] = tuple(jnp.asarray(a)
+                                                 for a in flat)
+                        tile_bytes = sum(a.nbytes for a in flat)
                 else:
                     groups = gather_ops.prepare_packed_groups(
                         packed, cfg.packed_bucket_floor)
@@ -885,7 +934,9 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
                     "q": store.q, "padded": store.padded_vertices,
                     "order": order, "tile": store.tile,
                     "tile_format": "packed", "format_choice": choice,
-                    "device_bytes": tile_bytes}
+                    "device_bytes": tile_bytes,
+                    "value_dtype": ("int8" if "packed_val_scale" in d
+                                    else "fp32")}
                 return d
         from repro.kernels.rer_spmm.ops import prepare_blocks
         b = coo_to_blocked(g, cfg.tile, order="column")

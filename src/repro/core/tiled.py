@@ -30,6 +30,21 @@ power-law graph's dense tile slots are structural zeros);
 `TiledStats.fill_factor` reports how much padding remains.  The dense
 path is kept bit-for-bit intact as the oracle (`tile_format="dense"`).
 
+Chunk-queue streaming (DESIGN.md C11): the callback loop above pays one
+host dispatch per staged chunk.  When the packed entries and the
+feature matrix both fit the device budget, `streaming_mode="auto"` (the
+default) stages the whole stream *once* as a device-resident
+`kernels.chunk_queue` slab queue and the aggregate becomes a single
+traced computation — zero per-chunk host round-trips, plain jax AD
+through the queue sweep (no custom_vjp), and the Mosaic persistent
+walker with explicit double-buffered DMA on TPU.  The callback loop
+remains the true out-of-core path (`streaming_mode="callback"` forces
+it; "chunk_queue" demands the queue and raises if it cannot fit).
+`value_dtype="int8"` quantises the streamed tile values (queue slabs
+and per-chunk packed staging alike) with error feedback
+(`distributed.compression`), cutting the value plane's H2D bytes 4x;
+`TiledStats.quant_val_bytes` vs `raw_val_bytes` records the saving.
+
 Duplicate-edge caveat (shared with the blocked backends): tiles are
 built with add-at, so multi-edges merge by summation before a max
 aggregation sees them; dedup edges first if exact multi-edge max
@@ -68,7 +83,8 @@ def dense_footprint_bytes(num_vertices: int, num_edges: int, in_dim: int,
                           tile: int = 256, has_val: bool = True,
                           num_shards: int = 1,
                           tile_format: str = "dense",
-                          training: bool = False) -> int:
+                          training: bool = False,
+                          value_dtype: str = "fp32") -> int:
     """Device bytes a graph-resident backend needs — the gate that
     decides when to spill to the streamed tiled executor.
 
@@ -81,10 +97,11 @@ def dense_footprint_bytes(num_vertices: int, num_edges: int, in_dim: int,
 
     `tile_format` prices the tile-carrying backends in the bytes they
     actually stage: "dense" is the historical 4 T^2 per tile, "packed"
-    prices pow2-bucketed (row, col, val) entries (12 B each, bucket
-    padding bounded by 2x + the bucket floor per tile — DESIGN.md C8),
-    and "auto" takes the cheaper of the two (what the autotuner would
-    pick on byte cost).
+    prices pow2-bucketed (row, col, val) entries (12 B each at fp32
+    values, 9 B + per-tile scales with `value_dtype="int8"` — bucket
+    padding bounded by 2x + the bucket floor per tile, DESIGN.md
+    C8/C11), and "auto" takes the cheaper of the two (what the
+    autotuner would pick on byte cost).
 
     For the ring-tiled backend the estimate is *per shard* of a
     `num_shards`-device ring (the budget is per device): one feature
@@ -92,9 +109,11 @@ def dense_footprint_bytes(num_vertices: int, num_edges: int, in_dim: int,
     bound on the device-resident stripe (`prepare_ring` refines the
     stripe term with the actually-built plan before deciding to
     spill — this closed form is for sizing without a build)."""
+    from repro.kernels.autotune import packed_entry_bytes
     n, e, f, h = num_vertices, num_edges, in_dim, out_dim
     act = 2 if training else 1                # cotangent twin per buffer
     feat = act * 4 * n * (f + h)              # resident X and H
+    scale_b = 4 if value_dtype == "int8" else 0   # f32 scale per group
     if backend == "segment":
         edges = e * (8 + (4 if has_val else 0))
         return feat + edges + act * 4 * e * max(f, h)  # (E, d) gather
@@ -103,7 +122,9 @@ def dense_footprint_bytes(num_vertices: int, num_edges: int, in_dim: int,
         nnzb_ub = min(q * q, max(e, 1))
         dense = feat + 4 * nnzb_ub * tile * tile
         # merged entries <= E; pow2 bucket padding < 2x nnz + floor/tile
-        packed = feat + 12 * (2 * e + 8 * nnzb_ub) + 8 * nnzb_ub
+        packed = (feat
+                  + packed_entry_bytes(2 * e + 8 * nnzb_ub, value_dtype)
+                  + (8 + scale_b) * nnzb_ub)
         if tile_format == "dense" or backend == "fused":
             return dense              # the fused kernel eats dense tiles
         return packed if tile_format == "packed" else min(dense, packed)
@@ -119,7 +140,9 @@ def dense_footprint_bytes(num_vertices: int, num_edges: int, in_dim: int,
         per_dev_tiles = min(q_loc * q, p * max(e, 1))
         feat_ring = act * 4 * n_loc * (2 * f + h)
         dense = feat_ring + 4 * per_dev_tiles * t * t + 8 * per_dev_tiles
-        packed = feat_ring + 12 * (2 * e + 8 * p) + 4 * n_loc
+        packed = (feat_ring
+                  + packed_entry_bytes(2 * e + 8 * p, value_dtype)
+                  + scale_b * p + 4 * n_loc)
         if tile_format == "dense":
             return dense
         return packed if tile_format == "packed" else min(dense, packed)
@@ -379,6 +402,13 @@ def _packed_step_gated(acc, rows, cols, vals, stream, res, *, mode):
     return acc + jnp.concatenate([gx, s2], axis=1)
 
 
+@jax.jit
+def _dequant_tiles(q, s):
+    """(C, S) int8 values + (C,) per-tile scales -> f32 values, on
+    device right after upload (the packed chunk kernels stay fp32)."""
+    return q.astype(jnp.float32) * s[:, None]
+
+
 @partial(jax.jit, static_argnames=("op", "impl", "q"))
 def _chunk_step_kernel(acc, blocks, xs, *, op, impl, q):
     """Same chunk reduction expressed through the RER-SpMM kernel
@@ -425,6 +455,18 @@ class TiledStats:
     bwd_h2d_tile_bytes: int = 0
     bwd_h2d_x_bytes: int = 0
     bwd_d2h_bytes: int = 0
+    # chunk-queue streaming (DESIGN.md C11): the queue stages once and
+    # launches traced sweeps, so per-launch H2D/D2H counters above stay
+    # quiet on this path — these record the build-time staging instead
+    queue_builds: int = 0             # device queues staged
+    queue_steps: int = 0              # slabs across all staged queues
+    queue_launches: int = 0           # eager queue aggregates dispatched
+    queue_h2d_bytes: int = 0          # one-time queue staging bytes
+    # value-plane accounting (int8 tile values, DESIGN.md C11): bytes
+    # the edge-weight plane actually travelled as vs its f32 size —
+    # equal in fp32 mode, ~4x apart in int8 mode (scales included)
+    quant_val_bytes: int = 0
+    raw_val_bytes: int = 0
 
     def add_backward(self, other: "TiledStats"):
         """Fold one backward sweep's forward-shaped counters (the
@@ -443,10 +485,28 @@ class TiledStats:
             return 1.0
         return self.staged_nnz / self.staged_slots
 
+    def value_compression(self) -> float:
+        """Value-plane bytes moved / their f32 equivalent (1.0 in fp32
+        mode, ~0.26 with int8 values + per-group scales)."""
+        if not self.raw_val_bytes:
+            return 1.0
+        return self.quant_val_bytes / self.raw_val_bytes
+
     def as_dict(self) -> Dict[str, float]:
         d = dataclasses.asdict(self)
         d["fill_factor"] = self.fill_factor()
+        d["value_compression"] = self.value_compression()
         return d
+
+
+@dataclasses.dataclass(frozen=True)
+class QueuePlan:
+    """A feasible chunk-queue staging: `steps` slabs of `slab` entries,
+    `device_bytes` total resident footprint (queue + resident x + the
+    sweep's working set) under the executor's budget."""
+    slab: int
+    steps: int
+    device_bytes: int
 
 
 class TiledExecutor:
@@ -465,6 +525,20 @@ class TiledExecutor:
                   asks `kernels.autotune.choose_tile_format`; pass
                   `autotune_measure=True` to decide by timed sample
                   chunks instead of the byte cost model.
+    streaming_mode: "auto" | "callback" | "chunk_queue" (DESIGN.md
+                  C11).  "auto" stages the whole packed stream as a
+                  device-resident chunk queue whenever `queue_plan`
+                  says it fits the budget (zero per-chunk host round
+                  trips) and falls back to the per-chunk callback loop
+                  otherwise; "callback" forces the loop (the true
+                  out-of-core path); "chunk_queue" demands the queue
+                  and raises `DeviceBudgetExceeded` when it cannot.
+    value_dtype:  "fp32" | "int8" — how the packed tile *values*
+                  travel.  int8 quantises per staged tile / per queue
+                  slab with an error-feedback residual buffer
+                  (`distributed.compression.StreamingTileQuantizer`);
+                  indices always stay int32.  Requires a packed store
+                  (tile_format != "dense").
     """
 
     def __init__(self, graph: COOGraph, tile: int = 256, chunk: int = 8,
@@ -472,8 +546,14 @@ class TiledExecutor:
                  impl: Optional[str] = None, double_buffer: bool = True,
                  x_cache: int = 2, dim_hint: Optional[int] = None,
                  tile_format: str = "auto", bucket_floor: int = 8,
-                 autotune_measure: bool = False):
+                 autotune_measure: bool = False,
+                 streaming_mode: str = "auto",
+                 value_dtype: str = "fp32"):
         from repro.kernels.autotune import choose_tile_format
+        if streaming_mode not in ("auto", "callback", "chunk_queue"):
+            raise ValueError(streaming_mode)
+        if value_dtype not in ("fp32", "int8"):
+            raise ValueError(value_dtype)
         dim = dim_hint if dim_hint is not None else 128
         tile, chunk = fit_tile_plan(budget_bytes, dim, tile, chunk, x_cache)
         self.store: EdgeTileStore = build_tile_store(graph, tile)
@@ -483,19 +563,37 @@ class TiledExecutor:
         self.format_choice = choose_tile_format(
             tile_format, self.packed, backend="tiled",
             bucket_floor=bucket_floor, measure=autotune_measure,
-            store=self.store, dim=dim)
+            store=self.store, dim=dim, value_dtype=value_dtype)
         self.tile_format = self.format_choice.fmt
         self.bucket_floor = self.format_choice.bucket_floor
+        if value_dtype == "int8" and self.packed is None:
+            raise ValueError(
+                "value_dtype='int8' quantises packed tile values; "
+                "tile_format='dense' has no packed value plane")
         self.chunk = chunk
         self.budget_bytes = budget_bytes
         self.impl = impl
         self.double_buffer = double_buffer
         self.x_cache_cap = max(2, x_cache)
+        self.streaming_mode = streaming_mode
+        self.value_dtype = value_dtype
         self.stats = TiledStats()
         self._xcache: OrderedDict = OrderedDict()
         self._transposed: Optional["TiledExecutor"] = None
         self._diff_cache: Dict[str, Callable] = {}
         self._rel_select: Optional[int] = None
+        self._init_queue_state()
+
+    def _init_queue_state(self):
+        """Fresh chunk-queue caches + error-feedback quantiser (called
+        at construction and by `_from_stores` for derived views)."""
+        self._queue_cache: Dict[int, object] = {}
+        self._tq = None
+        self._counts_dev = None
+        self.quantizer = None
+        if self.value_dtype == "int8" and self.packed is not None:
+            from repro.distributed.compression import StreamingTileQuantizer
+            self.quantizer = StreamingTileQuantizer(self.packed.nnz)
 
     @classmethod
     def _from_stores(cls, store: EdgeTileStore,
@@ -515,6 +613,7 @@ class TiledExecutor:
         ex._transposed = None
         ex._diff_cache = {}
         ex._rel_select = None
+        ex._init_queue_state()
         return ex
 
     def transposed(self) -> "TiledExecutor":
@@ -554,6 +653,133 @@ class TiledExecutor:
                 f"rebuild the executor with dim_hint>={dim}")
         return c
 
+    # -- chunk-queue streaming (DESIGN.md C11) -------------------------
+    def queue_plan(self, d: int, op: str = "sum",
+                   differentiable: bool = False) -> Optional[QueuePlan]:
+        """Can this aggregate run as a device-resident chunk queue?
+        Prices the queue itself (`kernels.chunk_queue.queue_bytes`) plus
+        the sweep's working set — the resident (N, d) features, the
+        (N+1, d) accumulator and per-slab segment output, and one
+        (slab, d) gather intermediate — against the budget, halving the
+        slab (floor 256) until it fits.  Returns None when the callback
+        loop must run instead: streaming_mode="callback", no packed
+        store, over budget at the floor slab, or a *differentiable* max
+        that would need more than one slab (the scan's cross-slab
+        maximum-merge splits ties differently from `segment_max`'s
+        gradient convention, so multi-slab max grads would diverge from
+        the dense oracle; the forward-only max has no such constraint).
+        streaming_mode="chunk_queue" raises instead of returning None
+        for the budget/max cases."""
+        if self.streaming_mode == "callback" or self.packed is None:
+            return None
+        from repro.kernels.chunk_queue.ops import queue_bytes
+        m = max(self.packed.nnz, 1)
+        n = self.store.num_vertices
+        d = max(int(d), 1)
+
+        def total(slab: int) -> Tuple[int, int, int]:
+            slab = min(slab, m)
+            steps = -(-m // slab)
+            work = 4 * d * (slab + 2 * (n + 1)) + 4 * n * d
+            return queue_bytes(m, slab, self.value_dtype) + work, slab, steps
+
+        slab = m
+        b, slab, steps = total(slab)
+        if self.budget_bytes:
+            while b > self.budget_bytes and slab > 256:
+                b, slab, steps = total(max(slab // 2, 256))
+            if b > self.budget_bytes:
+                if self.streaming_mode == "chunk_queue":
+                    raise DeviceBudgetExceeded(
+                        f"chunk queue needs {b}B at the floor slab, "
+                        f"budget is {self.budget_bytes}B")
+                return None
+        if op == "max" and differentiable and steps > 1:
+            if self.streaming_mode == "chunk_queue":
+                raise DeviceBudgetExceeded(
+                    "differentiable max needs a single-slab queue "
+                    f"({m} entries) but the budget allows slab={slab}")
+            return None
+        return QueuePlan(slab, steps, b)
+
+    def _device_queue(self, slab: int):
+        """Build (once per slab size) and cache the device-resident
+        queue; accounts the one-time staging in the queue/value-plane
+        stat counters.  Built under `ensure_compile_time_eval`: the
+        first build may happen while tracing (`_queue_traced` runs at
+        trace time), and caching trace-scoped arrays would leak tracers
+        into every later trace that hits the cache."""
+        q = self._queue_cache.get(slab)
+        if q is None:
+            from repro.kernels.chunk_queue.ops import build_chunk_queue
+            with jax.ensure_compile_time_eval():
+                q = build_chunk_queue(self.packed, slab=slab,
+                                      value_dtype=self.value_dtype,
+                                      quantizer=self.quantizer)
+            self._queue_cache[slab] = q
+            st = self.stats
+            st.queue_builds += 1
+            st.queue_steps += q.steps
+            st.queue_h2d_bytes += q.device_bytes()
+            vb = int(q.vals.nbytes)
+            if q.value_dtype == "int8":
+                vb += int(q.scales.nbytes)
+            st.quant_val_bytes += vb
+            st.raw_val_bytes += q.raw_value_bytes()
+        return q
+
+    def _tile_queue(self):
+        """The dst-sorted tile layout for the persistent Mosaic walker
+        (built lazily, fp32 values only — the int8 queue keeps the XLA
+        slab formulation so values stay quantised end to end)."""
+        from repro.kernels.chunk_queue import ops as cq_ops
+        if self.value_dtype != "fp32":
+            return None
+        if (self.impl or cq_ops.default_impl()) != "pallas":
+            return None
+        if self._tq is None:
+            with jax.ensure_compile_time_eval():
+                self._tq = cq_ops.build_tile_queue(self.packed,
+                                                   self.bucket_floor)
+            self.stats.queue_h2d_bytes += self._tq.device_bytes()
+        return self._tq
+
+    def _counts_col(self):
+        if self._counts_dev is None:
+            with jax.ensure_compile_time_eval():
+                self._counts_dev = jnp.asarray(
+                    np.maximum(self.store.in_counts, 1.0))[:, None]
+        return self._counts_dev
+
+    def _queue_eager(self, x: np.ndarray, op: str,
+                     plan: QueuePlan) -> np.ndarray:
+        """One queue launch for an eager aggregate: device-put x once,
+        run the staged sweep, pull the result back."""
+        from repro.kernels.chunk_queue import ops as cq_ops
+        q = self._device_queue(plan.slab)
+        self.stats.h2d_x_bytes += x.nbytes
+        self.stats.x_loads += 1
+        y = cq_ops.chunk_queue_aggregate(
+            q, jax.device_put(x), op=op, impl=self.impl,
+            tile_queue=self._tile_queue() if op == "sum" else None)
+        self.stats.queue_launches += 1
+        out = np.asarray(y)
+        self.stats.d2h_bytes += out.nbytes
+        return out
+
+    def _queue_traced(self, x, op: str, plan: QueuePlan):
+        """The traced formulation `make_streamed_aggregate` routes to
+        when a queue plan exists: plain jax — jit fuses it, plain AD
+        differentiates it, no custom_vjp and no host callbacks."""
+        from repro.kernels.chunk_queue.ops import queue_sweep_xla
+        q = self._device_queue(plan.slab)
+        base = "sum" if op == "mean" else op
+        y = queue_sweep_xla(q.gsrc, q.gdst, q.vals, q.scales, x,
+                            n=q.n, op=base)
+        if op == "mean":
+            y = y / self._counts_col()
+        return y
+
     def aggregate(self, x: np.ndarray, op: str, order: str = "auto",
                   extract_fn: Optional[Callable] = None,
                   extract_dim: Optional[int] = None,
@@ -589,6 +815,14 @@ class TiledExecutor:
         base_op = "sum" if op == "mean" else op
         if base_op not in ("sum", "max"):
             raise ValueError(op)
+        if extract_fn is None and rel_channels is None:
+            plan = self.queue_plan(d, base_op)
+            if plan is not None:
+                out = self._queue_eager(x, base_op, plan)
+                if op == "mean":
+                    out = out / np.maximum(self.store.in_counts,
+                                           1.0)[:, None]
+                return out
         # extract_fn is called as-is: pass an already-jitted callable to
         # avoid re-tracing per aggregate() call (EnGNLayer caches its
         # jitted stage functions per layer instance)
@@ -656,6 +890,33 @@ class TiledExecutor:
             self._xcache.popitem(last=False)
         return dev
 
+    def _stage_packed(self, idx, width: int, bucket: int):
+        """Upload one group of packed tiles as device (rows, cols, vals)
+        at the given bucket; returns (payload, host bytes moved).  With
+        `value_dtype="int8"` the value plane travels quantised (one f32
+        scale per tile, error feedback through `self.quantizer`) and
+        dequantises on device, so downstream chunk kernels are unchanged
+        (DESIGN.md C11); the quant/raw value-byte counters record the
+        saving."""
+        ps = self.packed
+        if self.value_dtype == "int8":
+            rows, cols, qv, sc = ps.pack_quantized(idx, width, bucket,
+                                                   self.quantizer)
+            tb = rows.nbytes + cols.nbytes + qv.nbytes + sc.nbytes
+            self.stats.quant_val_bytes += qv.nbytes + sc.nbytes
+            self.stats.raw_val_bytes += 4 * qv.size
+            payload = (jax.device_put(rows), jax.device_put(cols),
+                       _dequant_tiles(jax.device_put(qv),
+                                      jax.device_put(sc)))
+        else:
+            rows, cols, vals = ps.pack(idx, width, bucket)
+            tb = rows.nbytes + cols.nbytes + vals.nbytes
+            self.stats.quant_val_bytes += vals.nbytes
+            self.stats.raw_val_bytes += vals.nbytes
+            payload = (jax.device_put(rows), jax.device_put(cols),
+                       jax.device_put(vals))
+        return payload, tb
+
     def _stage_chunk(self, idx: np.ndarray, x: np.ndarray, ext, chunk: int):
         """Host->device for one chunk of tiles: the tile payload —
         dense (C, T, T) stack, or packed (C, S) entry arrays at the
@@ -669,14 +930,11 @@ class TiledExecutor:
         if self.tile_format == "packed":
             ps = self.packed
             bucket = ps.bucket_of(idx, self.bucket_floor)
-            rows, cols, vals = ps.pack(idx, chunk, bucket)
-            tb = rows.nbytes + cols.nbytes + vals.nbytes
+            payload, tb = self._stage_packed(idx, chunk, bucket)
             self.stats.packed_tile_bytes += tb
             self.stats.staged_nnz += int(
                 (ps.entry_ptr[idx + 1] - ps.entry_ptr[idx]).sum())
             self.stats.staged_slots += chunk * bucket
-            payload = (jax.device_put(rows), jax.device_put(cols),
-                       jax.device_put(vals))
         else:
             # fresh buffer per stage: device_put may be zero-copy on
             # CPU, so the staged chunk must not be overwritten while in
@@ -791,14 +1049,11 @@ class TiledExecutor:
             if self.tile_format == "packed":
                 ps = self.packed
                 bucket = ps.bucket_of([k], self.bucket_floor)
-                rows, cols, vals = ps.pack([k], 1, bucket)
-                tb = rows.nbytes + cols.nbytes + vals.nbytes
+                payload, tb = self._stage_packed([k], 1, bucket)
                 self.stats.packed_tile_bytes += tb
                 self.stats.staged_nnz += int(ps.entry_ptr[k + 1]
                                              - ps.entry_ptr[k])
                 self.stats.staged_slots += bucket
-                payload = (jax.device_put(rows), jax.device_put(cols),
-                           jax.device_put(vals))
             else:
                 blk_host = st.densify([k],
                                       np.zeros((1, t, t), np.float32))[0]
@@ -1194,6 +1449,19 @@ def make_streamed_aggregate(ex: TiledExecutor, op: str) -> Callable:
         scatters g/count to every tied winner — the same even-split
         convention as jax's segment_max gradient.
 
+    Chunk-queue route (DESIGN.md C11): when `ex.queue_plan` finds a
+    device-resident staging that fits, the returned callable skips the
+    callback machinery entirely and runs `ex._queue_traced` — a plain
+    traced lax.scan over the prestaged slabs that jit fuses into the
+    surrounding layer and plain jax AD differentiates (sum backward is
+    the same gather/scatter scan transposed by AD; max inherits
+    segment_max's tie convention, which is why `queue_plan` insists on a
+    single slab for differentiable max).  The routing happens per call
+    at trace time, so one wrapper serves both regimes: a model traced
+    under a tight budget streams through callbacks, the same model
+    under a roomy budget runs queue-resident with zero host round
+    trips.
+
     Results are cached per (executor, op) so repeated traces reuse one
     custom_vjp callable.  Gradients flow only to x (the adjacency is a
     constant of the graph)."""
@@ -1230,12 +1498,12 @@ def make_streamed_aggregate(ex: TiledExecutor, op: str) -> Callable:
             lambda _, g: (jax.pure_callback(_host_sum_bwd, _shape(g),
                                             g),))
         if op == "sum":
-            fn = agg_sum
+            cb_fn = agg_sum
         else:
             counts = jnp.asarray(
                 np.maximum(ex.store.in_counts, 1.0))[:, None]
 
-            def fn(x):
+            def cb_fn(x):
                 return agg_sum(x) / counts
     else:
         def _host_max_fwd(xh):
@@ -1265,7 +1533,20 @@ def make_streamed_aggregate(ex: TiledExecutor, op: str) -> Callable:
             return (gx,)
 
         agg_max.defvjp(agg_max_fwd, agg_max_bwd)
-        fn = agg_max
+        cb_fn = agg_max
+
+    base_op = "sum" if op == "mean" else op
+
+    def fn(x):
+        # trace-time routing: shapes are concrete under jit, so the
+        # plan (and thus which formulation lands in the jaxpr) is
+        # decided per trace, not per run
+        plan = ex.queue_plan(int(x.shape[1]), base_op,
+                             differentiable=True)
+        if plan is None:
+            return cb_fn(x)
+        return ex._queue_traced(x, op, plan)
+
     ex._diff_cache[op] = fn
     return fn
 

@@ -1,19 +1,34 @@
-"""Gradient compression: int8 quantised reduction with error feedback.
+"""int8 quantisation with error feedback: gradients and tile values.
 
-At 1000+ nodes the data-parallel gradient reduce-scatter is a top-3
-collective.  Per-tensor symmetric int8 quantisation cuts its bytes 4x
-(f32) and the residual is carried to the next step (error feedback), so
-convergence is preserved (1-bit/low-bit SGD literature).  The transform
-plugs into make_train_step(grad_transform=...): gradients are quantised,
-dequantised after the (sharded) mean, and the quantisation error is added
-back the following step.
+Two consumers share the same symmetric per-tensor int8 transform:
+
+* **Gradient reduction** (the original use): at 1000+ nodes the
+  data-parallel gradient reduce-scatter is a top-3 collective.
+  Per-tensor symmetric int8 quantisation cuts its bytes 4x (f32) and
+  the residual is carried to the next step (error feedback), so
+  convergence is preserved (1-bit/low-bit SGD literature).  The
+  transform plugs into make_train_step(grad_transform=...).
+
+* **Streamed tile values** (DESIGN.md C11): the out-of-core executor
+  re-uploads the packed tile entries' edge weights every sweep; with
+  `EnGNConfig.tile_value_dtype="int8"` those values travel as int8 +
+  one f32 scale per staged tile (or per chunk-queue slab), cutting the
+  value third of the packed-entry payload 4x.  `StreamingTileQuantizer`
+  keeps a per-entry error-feedback buffer aligned with the packed
+  store, so the quantisation residual of sweep k is folded into sweep
+  k+1's values — over a training run the *time-averaged* effective
+  edge weight converges to the exact f32 value even though any single
+  sweep is off by at most one quantisation step.  These are host-side
+  numpy transforms (they run inside the staging loop, outside jit);
+  `quantize_int8`/`dequantize_int8` below are their jax twins.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -55,3 +70,79 @@ def compression_ratio(params) -> float:
     total = sum(p.size * 4 for p in jax.tree.leaves(params))
     comp = sum(p.size * 1 + 4 for p in jax.tree.leaves(params))
     return comp / total
+
+
+# ----------------------------------------------------------------------
+# Host-side (numpy) twins for the streamed tile-value path (C11)
+# ----------------------------------------------------------------------
+
+def quantize_int8_np(x: np.ndarray, err: Optional[np.ndarray] = None
+                     ) -> Tuple[np.ndarray, float, np.ndarray]:
+    """Symmetric per-tensor int8 quantisation of a host array, with
+    optional error feedback: quantises `x + err` and returns
+    (q, scale, new_err) where new_err is the residual to fold into the
+    next quantisation of the same values.  Round-trip error is bounded
+    by scale/2 = max|x + err| / 254 per element."""
+    x = np.asarray(x, np.float32)
+    v = x if err is None else x + err
+    scale = float(np.max(np.abs(v)) / 127.0 + 1e-12) if v.size else 1e-12
+    q = np.clip(np.rint(v / scale), -127, 127).astype(np.int8)
+    new_err = (v - q.astype(np.float32) * scale).astype(np.float32)
+    return q, scale, new_err
+
+
+class StreamingTileQuantizer:
+    """Error-feedback int8 quantiser for re-streamed packed tile values.
+
+    The buffer is aligned with a `PackedTileStore`'s flat `val` array
+    (one f32 residual per merged entry), so per-tile staging
+    (`PackedTileStore.pack_quantized`) and whole-queue staging
+    (`kernels.chunk_queue.build_chunk_queue`) share one feedback state:
+    each quantisation of an entry range reads and rewrites exactly its
+    slice.  Sum aggregation is linear in the values, so carrying the
+    residual makes the *time-averaged* streamed sum unbiased across
+    sweeps (the same argument as error-feedback SGD)."""
+
+    def __init__(self, num_entries: int):
+        self.err = np.zeros(int(num_entries), np.float32)
+
+    def quantize_range(self, vals: np.ndarray, lo: int, hi: int
+                       ) -> Tuple[np.ndarray, float]:
+        """Quantise `vals` (the entries at [lo, hi) of the store's flat
+        value array) with this buffer's residual for that range; the
+        residual slice is updated in place."""
+        q, scale, new_err = quantize_int8_np(vals, self.err[lo:hi])
+        self.err[lo:hi] = new_err
+        return q, scale
+
+    def reset(self):
+        self.err[:] = 0.0
+
+
+def quantize_stream_np(vals2d: np.ndarray,
+                       quantizer: Optional[StreamingTileQuantizer] = None,
+                       entry_offset: int = 0
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Quantise a (steps, slab) host value array row-by-row (one f32
+    scale per row — the chunk-queue slab granularity).  When a
+    `quantizer` is given, rows map to consecutive entry ranges of its
+    buffer starting at `entry_offset` (trailing padding entries carry
+    zero residual by construction)."""
+    v = np.asarray(vals2d, np.float32)
+    steps, slab = v.shape
+    q = np.zeros((steps, slab), np.int8)
+    scales = np.zeros((steps,), np.float32)
+    for s in range(steps):
+        if quantizer is None:
+            q[s], scales[s], _ = quantize_int8_np(v[s])
+            continue
+        # rows map to consecutive entry ranges of the feedback buffer;
+        # the final row's padding tail (entries past the buffer) always
+        # quantises exact zeros, so it carries no residual
+        lo = entry_offset + s * slab
+        m = max(0, min(slab, quantizer.err.size - lo))
+        err_row = np.zeros(slab, np.float32)
+        err_row[:m] = quantizer.err[lo:lo + m]
+        q[s], scales[s], new_err = quantize_int8_np(v[s], err_row)
+        quantizer.err[lo:lo + m] = new_err[:m]
+    return q, scales

@@ -339,6 +339,40 @@ class PackedTileStore:
             vals[c, :m] = self.val[lo:hi]
         return rows, cols, vals
 
+    def pack_quantized(self, tiles, width: int, bucket: int, quantizer=None
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                  np.ndarray]:
+        """`pack`, but the value plane ships int8 with one f32 scale per
+        staged tile (symmetric per-tile quantisation, DESIGN.md C11):
+        returns `(rows, cols, qvals int8, scales (width,) f32)`.  When a
+        `StreamingTileQuantizer` is passed, its residual buffer — indexed
+        by this store's flat entry offsets, which `transpose_packed_store`
+        preserves — feeds quantisation error back into the next staging
+        of the same entries.  Padding tiles carry scale 1.0 (dequantising
+        their zero slots is a no-op either way)."""
+        from repro.distributed.compression import quantize_int8_np
+        tiles = np.asarray(tiles, np.int64)
+        rows = np.zeros((width, bucket), np.int32)
+        cols = np.zeros((width, bucket), np.int32)
+        qvals = np.zeros((width, bucket), np.int8)
+        scales = np.ones(width, np.float32)
+        for c, k in enumerate(tiles):
+            if k < 0:
+                continue
+            lo, hi = int(self.entry_ptr[k]), int(self.entry_ptr[k + 1])
+            m = hi - lo
+            rows[c, :m] = self.row_local[lo:hi]
+            cols[c, :m] = self.col_local[lo:hi]
+            if m == 0:
+                continue
+            if quantizer is not None:
+                q, s = quantizer.quantize_range(self.val[lo:hi], lo, hi)
+            else:
+                q, s, _ = quantize_int8_np(self.val[lo:hi])
+            qvals[c, :m] = q
+            scales[c] = s
+        return rows, cols, qvals, scales
+
 
 def merge_by_key(key: np.ndarray, w: np.ndarray
                  ) -> Tuple[np.ndarray, np.ndarray]:

@@ -44,34 +44,41 @@ class TileFormatChoice:
     packed_bytes: int            # staged entry bytes, all tiles
     dense_bytes: int             # staged dense-tile bytes, all tiles
     reason: str                  # "forced" | "cost-model" | "measured"
+    value_dtype: str = "fp32"    # how the value plane travels (C11)
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
 
 
-def packed_entry_bytes(slots: int) -> int:
-    """Bytes per staged packed entry slot: int32 row + int32 col +
-    float32 val."""
-    return 12 * slots
+def packed_entry_bytes(slots: int, value_dtype: str = "fp32") -> int:
+    """Bytes per staged packed entry slot: int32 row + int32 col + the
+    value — float32 by default, int8 under quantised streaming
+    (`value_dtype="int8"`, DESIGN.md C11; the per-group f32 scales are
+    priced by the callers that know the group count)."""
+    vb = 1 if value_dtype == "int8" else 4
+    return (8 + vb) * slots
 
 
-def _model_choice(packed: PackedTileStore,
-                  bucket_floor: int = 8) -> TileFormatChoice:
+def _model_choice(packed: PackedTileStore, bucket_floor: int = 8,
+                  value_dtype: str = "fp32") -> TileFormatChoice:
     dense_bytes = 4 * packed.nnzb * packed.tile * packed.tile
-    pbytes = packed_entry_bytes(packed.packed_slots(bucket_floor))
+    pbytes = (packed_entry_bytes(packed.packed_slots(bucket_floor),
+                                 value_dtype)
+              + (4 * packed.nnzb if value_dtype == "int8" else 0))
     fmt = "packed" if pbytes < dense_bytes else "dense"
     return TileFormatChoice(fmt, bucket_floor,
                             packed.fill_factor(bucket_floor),
                             packed.dense_fill(), pbytes, dense_bytes,
-                            "cost-model")
+                            "cost-model", value_dtype)
 
 
 def _forced_choice(fmt: str, packed: Optional[PackedTileStore],
-                   bucket_floor: int = 8) -> TileFormatChoice:
+                   bucket_floor: int = 8,
+                   value_dtype: str = "fp32") -> TileFormatChoice:
     if packed is None:
         return TileFormatChoice(fmt, bucket_floor, 1.0, 1.0, 0, 0,
-                                "forced")
-    base = _model_choice(packed, bucket_floor)
+                                "forced", value_dtype)
+    base = _model_choice(packed, bucket_floor, value_dtype)
     return dataclasses.replace(base, fmt=fmt, reason="forced")
 
 
@@ -152,19 +159,26 @@ def choose_tile_format(requested: str, packed: Optional[PackedTileStore],
                        *, backend: str = "tiled",
                        bucket_floor: int = 8, measure: bool = False,
                        store: Optional[EdgeTileStore] = None,
-                       dim: int = 32) -> TileFormatChoice:
+                       dim: int = 32,
+                       value_dtype: str = "fp32") -> TileFormatChoice:
     """Resolve an `EnGNConfig.tile_format` request into a concrete
-    choice recorded in the prepared plan."""
+    choice recorded in the prepared plan.  `value_dtype` prices the
+    packed value plane as it will actually travel (int8 + per-tile
+    scales under quantised streaming), which can flip a near-dense
+    graph to packed that fp32 pricing would keep dense."""
     if requested not in TILE_FORMATS:
         raise ValueError(
             f"tile_format must be one of {TILE_FORMATS}, got "
             f"{requested!r}")
     if requested != "auto":
-        return _forced_choice(requested, packed, bucket_floor)
+        return _forced_choice(requested, packed, bucket_floor,
+                              value_dtype)
     if packed is None:
-        return _forced_choice("dense", None, bucket_floor)
+        return _forced_choice("dense", None, bucket_floor, value_dtype)
     if measure and store is not None:
-        return measured_choice(store, packed, backend=backend, dim=dim,
-                               bucket_floors=(bucket_floor,
-                                              4 * bucket_floor))
-    return _model_choice(packed, bucket_floor)
+        choice = measured_choice(store, packed, backend=backend,
+                                 dim=dim,
+                                 bucket_floors=(bucket_floor,
+                                                4 * bucket_floor))
+        return dataclasses.replace(choice, value_dtype=value_dtype)
+    return _model_choice(packed, bucket_floor, value_dtype)

@@ -1,0 +1,1 @@
+"""Persistent chunk-queue streaming kernels (DESIGN.md C11)."""

@@ -68,6 +68,13 @@ class ServingConfig:
     # executor (None/0 disables the guard)
     device_budget_bytes: Optional[int] = None
     tiled_tile: int = 128             # interval size for tiled fallback
+    # streaming regime of the per-batch tiled fallback (DESIGN.md C11):
+    # "auto" runs over-budget batches as a device-resident chunk queue
+    # when their packed stream fits (one traced launch per aggregate
+    # instead of a per-chunk callback loop), "callback" forces the loop
+    tiled_streaming_mode: str = "auto"
+    # "fp32" | "int8": quantise the fallback's streamed tile values
+    tiled_value_dtype: str = "fp32"
     # shard-aware gate: with ring_shards set, over-budget batches first
     # try the sharded ring-tiled backend (budget interpreted per shard)
     # before dropping to the streamed tiled executor
@@ -382,7 +389,9 @@ class GNNServingEngine:
                 + [layer.cfg.out_dim for layer in self.layers])
         ex = TiledExecutor(g, tile=self.config.tiled_tile,
                            budget_bytes=self.config.device_budget_bytes,
-                           dim_hint=max(dims))
+                           dim_hint=max(dims),
+                           streaming_mode=self.config.tiled_streaming_mode,
+                           value_dtype=self.config.tiled_value_dtype)
         gd = {"n": g.num_vertices, "backend": "tiled", "tiled_exec": ex}
         y = np.asarray(xs, np.float32)
         for layer, p in zip(self.layers, self.params):

@@ -1,0 +1,150 @@
+"""int8 quantisation with error feedback (DESIGN.md C11).
+
+Host-side (numpy) tile-value quantisation: round-trip bounds, the
+error-feedback residual making the *time-averaged* value exact, the
+row→entry-range mapping of the (steps, slab) stream quantiser, and the
+end-to-end tolerance of an int8 streamed sum against the fp32 segment
+oracle.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engn import segment_aggregate
+from repro.core.tiled import TiledExecutor
+from repro.distributed.compression import (StreamingTileQuantizer,
+                                           quantize_int8_np,
+                                           quantize_stream_np)
+from repro.graphs.format import COOGraph
+from repro.graphs.generate import rmat_graph
+
+import jax.numpy as jnp
+
+
+def _graph(n, e, seed):
+    g = rmat_graph(n, e, seed=seed)
+    uniq = np.unique(np.stack([g.src, g.dst]), axis=1)
+    rng = np.random.default_rng(seed)
+    val = rng.uniform(0.1, 2.0, uniq.shape[1]).astype(np.float32)
+    return COOGraph(n, uniq[0].astype(np.int32), uniq[1].astype(np.int32),
+                    val)
+
+
+# ------------------------------------------------------- round trip
+
+def test_quantize_int8_np_roundtrip_bound():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 3.0, 4096).astype(np.float32)
+    q, scale, err = quantize_int8_np(x)
+    deq = q.astype(np.float32) * scale
+    # symmetric rounding: each element is within half a quantisation step
+    assert np.max(np.abs(x - deq)) <= scale / 2 + 1e-6
+    # the residual IS the round-trip error (that's what gets fed back)
+    np.testing.assert_allclose(err, x - deq, atol=1e-6)
+    assert q.dtype == np.int8 and np.max(np.abs(q)) <= 127
+
+
+def test_quantize_int8_np_zero_and_empty():
+    q, scale, err = quantize_int8_np(np.zeros(8, np.float32))
+    assert np.all(q == 0) and np.all(err == 0)
+    q, scale, err = quantize_int8_np(np.zeros(0, np.float32))
+    assert q.size == 0 and err.size == 0
+
+
+# ------------------------------------------------- error feedback
+
+def test_error_feedback_time_average_converges():
+    """Re-streaming the same values with the residual folded in makes
+    the running mean of the dequantised stream converge to the exact
+    f32 values — any single sweep is off by <= scale/2, but the error
+    is carried, not dropped."""
+    rng = np.random.default_rng(1)
+    vals = rng.uniform(-1.0, 1.0, 512).astype(np.float32)
+    quant = StreamingTileQuantizer(vals.size)
+    sweeps = 64
+    acc = np.zeros_like(vals)
+    for _ in range(sweeps):
+        q, scale = quant.quantize_range(vals, 0, vals.size)
+        acc += q.astype(np.float32) * scale
+    mean = acc / sweeps
+    scale_bound = np.max(np.abs(vals)) / 127.0
+    # without feedback the bias would persist at O(scale/2) forever;
+    # with it the time-average closes as O(scale / sweeps)
+    assert np.max(np.abs(mean - vals)) < scale_bound / 2
+    one_shot_q, one_shot_scale, _ = quantize_int8_np(vals)
+    one_shot = one_shot_q.astype(np.float32) * one_shot_scale
+    assert (np.mean(np.abs(mean - vals))
+            < 0.25 * np.mean(np.abs(one_shot - vals)))
+
+
+def test_quantizer_reset_clears_residual():
+    quant = StreamingTileQuantizer(4)
+    quant.quantize_range(np.array([0.3, -0.7, 0.11, 0.9], np.float32), 0, 4)
+    assert np.any(quant.err != 0)
+    quant.reset()
+    assert np.all(quant.err == 0)
+
+
+# ------------------------------------------------- stream (slab) form
+
+def test_quantize_stream_np_rows_map_to_entry_ranges():
+    rng = np.random.default_rng(2)
+    m = 700                      # real entries; 3 rows of slab=256 = 768
+    slab, steps = 256, 3
+    flat = rng.uniform(-2, 2, m).astype(np.float32)
+    padded = np.zeros(steps * slab, np.float32)
+    padded[:m] = flat
+    v2d = padded.reshape(steps, slab)
+
+    quant = StreamingTileQuantizer(m)
+    q, scales = quantize_stream_np(v2d, quant, entry_offset=0)
+    assert q.shape == (steps, slab) and scales.shape == (steps,)
+    # per-row scale: each row's dequant error bounded by its own scale
+    deq = q.astype(np.float32) * scales[:, None]
+    assert np.max(np.abs(deq - v2d)) <= np.max(scales) / 2 + 1e-6
+    # padding tail of the final row quantises exact zeros -> no residual
+    # was written past the buffer, and the tail rounds to 0
+    assert np.all(q.reshape(-1)[m:] == 0)
+    # residuals buffer got exactly the per-entry round-trip error
+    np.testing.assert_allclose(quant.err,
+                               (padded - deq.reshape(-1))[:m], atol=1e-6)
+
+
+def test_quantize_stream_np_without_quantizer_matches_per_row():
+    rng = np.random.default_rng(3)
+    v2d = rng.normal(0, 1, (4, 64)).astype(np.float32)
+    q, scales = quantize_stream_np(v2d)
+    for s in range(4):
+        qs, ss, _ = quantize_int8_np(v2d[s])
+        np.testing.assert_array_equal(q[s], qs)
+        assert scales[s] == pytest.approx(ss)
+
+
+# ------------------------------------- end-to-end streamed tolerance
+
+def test_int8_streamed_sum_within_tolerance_of_segment_oracle():
+    g = _graph(300, 1500, seed=7)
+    rng = np.random.default_rng(8)
+    x = rng.normal(0, 1, (g.num_vertices, 16)).astype(np.float32)
+
+    ev = jnp.asarray(x)[jnp.asarray(g.src)] * jnp.asarray(g.val)[:, None]
+    ref = np.asarray(segment_aggregate(ev, jnp.asarray(g.dst),
+                                       g.num_vertices, "sum"))
+
+    ex = TiledExecutor(g, tile=64, chunk=4, tile_format="packed",
+                       value_dtype="int8")
+    out = np.asarray(ex.aggregate(x, "sum"))
+    # documented int8 tolerance: per-edge value error <= scale/2, sums
+    # accumulate ~sqrt(deg) of it — ~1% mean relative error with a
+    # worst-case envelope an order looser (see README / DESIGN.md C11)
+    denom = np.maximum(np.abs(ref), 1.0)
+    assert np.max(np.abs(out - ref) / denom) < 0.15
+    assert np.mean(np.abs(out - ref) / denom) < 0.015
+    # and the staged value bytes really shrank ~4x
+    assert ex.stats.value_compression() < 0.3
+
+
+def test_int8_requires_packed_store():
+    g = _graph(100, 400, seed=9)
+    with pytest.raises(ValueError, match="int8"):
+        TiledExecutor(g, tile=64, tile_format="dense", value_dtype="int8")

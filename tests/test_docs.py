@@ -1,0 +1,42 @@
+"""Docs integrity (tools/check_docs.py) runs clean, and its matching
+rules behave: GitHub anchor slugs, exact chapter-id matching (C1 never
+prefix-matches C10/C11), and the slash-citation form."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_repo_docs_are_clean():
+    assert check_docs.check_links() == []
+    assert check_docs.check_citations() == []
+
+
+def test_github_anchor_slugs():
+    f = check_docs.github_anchor
+    assert f("C11. Persistent chunk queue & quantised tile values") == \
+        "c11-persistent-chunk-queue--quantised-tile-values"
+    assert f("S3. RER → blocked SpMM (paper §4.1, §5.3)") == \
+        "s3-rer--blocked-spmm-paper-41-53"
+    assert f("Backend × model × format matrix") == \
+        "backend--model--format-matrix"
+    assert f("`code` in a heading") == "code-in-a-heading"
+
+
+def test_chapter_ids_match_exactly_not_by_prefix():
+    chapters = check_docs.design_chapters()
+    # the contract: C1 and C10/C11 are distinct ids, all present
+    for cid in ("C1", "C10", "C11", "S7"):
+        assert cid in chapters
+    assert "C99" not in chapters
+
+
+def test_slash_citation_form_parses_both_ids():
+    m = check_docs.CITE_RE.search("held inside (DESIGN.md C9/C10) loop")
+    assert m is not None
+    parts = m.group(1).split("/")
+    ids = [p if p[0] in "SC" else m.group(1)[0] + p for p in parts]
+    assert ids == ["C9", "C10"]

@@ -280,7 +280,9 @@ def test_streamed_backward_stats_and_transposed_sharing():
     transposed store is a zero-copy view of the forward host arrays."""
     g = _int_graph(120, 800, seed=2)
     x = jnp.asarray(_int_features(120, 5, 2))
-    ex = TiledExecutor(g, tile=16, chunk=2)
+    # pin the callback loop: this test is about the bwd_* accounting of
+    # the transposed re-stream, which the chunk-queue route never runs
+    ex = TiledExecutor(g, tile=16, chunk=2, streaming_mode="callback")
     agg = make_streamed_aggregate(ex, "sum")
     jax.grad(lambda xx: jnp.sum(agg(xx)))(x)
     s = ex.stats
@@ -496,4 +498,8 @@ def test_gnn_training_trajectory_tiled_matches_blocked():
         traj[tag] = losses
     np.testing.assert_allclose(traj["tiled"], traj["blocked"],
                                rtol=0, atol=1e-4)
-    assert gd_t["tiled_exec"].stats.bwd_tiles > 0
+    st = gd_t["tiled_exec"].stats
+    # callback regime streams transposed tiles backward; the chunk-queue
+    # regime (DESIGN.md C11) differentiates the device-resident sweep
+    # instead, so no backward tiles move on it
+    assert st.bwd_tiles > 0 or st.queue_builds > 0

@@ -310,7 +310,10 @@ def test_tiled_stats_fill_factor_packed_beats_dense():
     g = _int_graph(150, 700, seed=4)
     x = _int_features(150, 6, 4)
     dense = TiledExecutor(g, tile=32, chunk=2, tile_format="dense")
-    packed = TiledExecutor(g, tile=32, chunk=2, tile_format="packed")
+    # pin the callback loop: the per-chunk staging counters under test
+    # (fill_factor, packed_tile_bytes) only move on the C7 path
+    packed = TiledExecutor(g, tile=32, chunk=2, tile_format="packed",
+                           streaming_mode="callback")
     a = dense.aggregate(x, "sum")
     b = packed.aggregate(x, "sum")
     assert np.array_equal(a, b)

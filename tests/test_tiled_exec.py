@@ -87,8 +87,12 @@ def test_tiled_empty_graph_and_empty_rows():
 def test_double_buffer_off_same_results_and_stats():
     g = _int_graph(60, 400, seed=1)
     x = _int_features(60, 6, 1)
-    ex_db = TiledExecutor(g, tile=16, chunk=2, double_buffer=True)
-    ex_sq = TiledExecutor(g, tile=16, chunk=2, double_buffer=False)
+    # pin the callback loop: double buffering is a property of the
+    # per-chunk staging pipeline the chunk-queue route replaces
+    ex_db = TiledExecutor(g, tile=16, chunk=2, double_buffer=True,
+                          streaming_mode="callback")
+    ex_sq = TiledExecutor(g, tile=16, chunk=2, double_buffer=False,
+                          streaming_mode="callback")
     a = ex_db.aggregate(x, "sum", order="column")
     b = ex_sq.aggregate(x, "sum", order="column")
     assert np.array_equal(a, b)
@@ -104,8 +108,10 @@ def test_row_order_spills_more_than_column():
     (Q^2 writes), column-major flushes each interval once (Q writes)."""
     g = _int_graph(100, 900, seed=2)
     x = _int_features(100, 8, 2)
-    col = TiledExecutor(g, tile=16, chunk=1)
-    row = TiledExecutor(g, tile=16, chunk=1)
+    # pin the callback loop: accumulator spill traffic is a property
+    # of the per-chunk schedule, not of the device-resident queue
+    col = TiledExecutor(g, tile=16, chunk=1, streaming_mode="callback")
+    row = TiledExecutor(g, tile=16, chunk=1, streaming_mode="callback")
     a = col.aggregate(x, "sum", order="column")
     b = row.aggregate(x, "sum", order="row")
     assert np.array_equal(a, b)
