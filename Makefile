@@ -17,7 +17,7 @@ bench:
 	$(PYTHON) -m benchmarks.run
 
 # the packed-tile perf story only (C8): streamed + blocked + ring
-# packed-vs-dense rows (+ the C9 train-step rows), BENCH_7.json summary
+# packed-vs-dense rows (+ the C9 train-step rows), BENCH_8.json summary
 bench-packed:
 	$(PYTHON) -m benchmarks.run --only tiled,ring_tiled
 

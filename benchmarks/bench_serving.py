@@ -1,6 +1,8 @@
 """Serving — requests/sec and cache hit rate under zipf-skewed traffic,
 result cache on vs off, through the full engine (continuous batching +
-L-hop subgraph extraction + degree-aware cache; DESIGN.md S7)."""
+L-hop subgraph extraction + degree-aware cache; DESIGN.md S7), plus the
+async SLO-driven pipeline vs the synchronous loop and the workload-shape
+sweep (diurnal / flash crowd / hub storm; DESIGN.md C12)."""
 from __future__ import annotations
 
 import time
@@ -13,7 +15,8 @@ from benchmarks.common import emit, scaled
 from repro.core.models import init_stack, make_gnn_stack
 from repro.graphs.generate import (make_dataset, random_features,
                                    zipf_traffic)
-from repro.serving import GNNServingEngine, ServingConfig
+from repro.serving import (GNNServingEngine, ServingConfig, ServingPipeline,
+                           WorkloadSpec, make_trace, replay_closed)
 
 
 def _serve(engine, requests):
@@ -21,6 +24,15 @@ def _serve(engine, requests):
         engine.submit(rid, ids)
     t0 = time.perf_counter()
     responses = engine.drain()
+    return responses, time.perf_counter() - t0
+
+
+def _serve_trace(server, trace, pump_every=0):
+    """Closed-loop replay timer: pump_every=0 queues the whole trace
+    before draining (peak-throughput regime — backlog lets the pipeline
+    merge admissions); pump_every=k interleaves serving with arrivals."""
+    t0 = time.perf_counter()
+    responses = replay_closed(server, trace, pump_every=pump_every)
     return responses, time.perf_counter() - t0
 
 
@@ -71,3 +83,73 @@ def run():
         emit(f"serving/{label}/steady_state_compiles",
              tel["engine"]["compiles"],
              f"{tel['engine']['subgraphs']} subgraphs")
+
+    # -- async pipeline vs the synchronous loop (DESIGN.md C12) -----------
+    # Same zipf trace through (a) the engine's sync drain and (b) the
+    # pipelined front end with backlog-adaptive admission: merged
+    # admissions dedup overlapping hub frontiers, so the pipeline does
+    # fewer (larger) extractions and device dispatches per served vertex.
+    n_pl = 96 if common.SMOKE else 320
+    spec = WorkloadSpec(n_requests=n_pl, duration_s=0.5, mean_size=8,
+                        skew="zipf", shape="constant", seed=1)
+    warm_trace = make_trace(
+        WorkloadSpec(n_requests=n_pl, duration_s=0.5, mean_size=8,
+                     skew="zipf", shape="constant", seed=2), deg)
+    trace = make_trace(spec, deg)
+
+    def pipeline_cfg():
+        return ServingConfig(batch_size=128, num_hops=2, fanout=16,
+                             pipeline_depth=2, extract_workers=2,
+                             adaptive_batching=True, max_batch_factor=8)
+
+    sync_eng = GNNServingEngine(gn, x, layers, params, pipeline_cfg())
+    for r in warm_trace:                       # compile sync shape buckets
+        sync_eng.submit(r.rid, r.vertex_ids)
+    sync_eng.drain()
+    sync_eng.reset_telemetry()
+    for r in trace:
+        sync_eng.submit(r.rid, r.vertex_ids)
+    t0 = time.perf_counter()
+    sync_res = sync_eng.drain()
+    sync_dt = time.perf_counter() - t0
+    sync_p99 = sync_eng.telemetry()["latency"]["p99_s"]
+    emit("serving/sync/requests_per_s", round(len(sync_res) / sync_dt, 1),
+         f"{sync_eng.stats['subgraphs']} extractions")
+    emit("serving/sync/latency_p99_us", round(sync_p99 * 1e6, 1), "")
+
+    pl = ServingPipeline(GNNServingEngine(gn, x, layers, params,
+                                          pipeline_cfg()))
+    _serve_trace(pl, warm_trace)               # compile merged buckets
+    pl.engine.reset_telemetry()
+    pl.reset_telemetry()
+    pl_res, pl_dt = _serve_trace(pl, trace)
+    pl_p99 = pl.telemetry()["latency"]["p99_s"]
+    speedup = (len(pl_res) / pl_dt) / (len(sync_res) / sync_dt)
+    emit("serving/pipeline/requests_per_s", round(len(pl_res) / pl_dt, 1),
+         f"{pl.engine.stats['subgraphs']} extractions, "
+         f"{pl.stats['adaptive_merges']} merged admissions")
+    emit("serving/pipeline/latency_p99_us", round(pl_p99 * 1e6, 1), "")
+    emit("serving/pipeline_vs_sync_speedup", round(speedup, 2),
+         f"{len(pl_res)} requests")
+    pl.close()
+
+    # -- workload shapes + SLO shedding (DESIGN.md C12) -------------------
+    # Each shape replays through a fresh pipeline with a per-request SLO;
+    # requests whose deadline the EWMA queue estimate cannot meet are
+    # shed at admission, answered status="expired".
+    n_wl = 32 if common.SMOKE else 160
+    for shape in ("diurnal", "flash_crowd", "hub_storm"):
+        wspec = WorkloadSpec(n_requests=n_wl, duration_s=0.3, mean_size=6,
+                             shape=shape, slo_s=5.0, seed=3)
+        wl = ServingPipeline(GNNServingEngine(
+            gn, x, layers, params,
+            ServingConfig(batch_size=128, num_hops=2, fanout=16,
+                          cache_capacity=2048, warm_cache=True,
+                          warm_cache_max=128)))
+        wtrace = make_trace(wspec, deg)
+        wres, wdt = _serve_trace(wl, wtrace, pump_every=4)
+        ok = sum(r.status == "ok" for r in wres)
+        shed = sum(r.status == "expired" for r in wres)
+        emit(f"serving/workload/{shape}/requests_per_s",
+             round(ok / wdt, 1), f"{shed} shed")
+        wl.close()

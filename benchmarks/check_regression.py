@@ -9,6 +9,7 @@ recording a slower CSV artifact.
 
     PYTHONPATH=src python -m benchmarks.check_regression
     PYTHONPATH=src python -m benchmarks.check_regression --update
+    PYTHONPATH=src python -m benchmarks.check_regression --only-prefix serving/
 
 Only rows named in the baseline are gated (wall-clock numbers jitter
 per machine class; the curated set is the stable smoke throughputs).
@@ -44,9 +45,16 @@ def load_csv(path: str) -> dict:
     return rows
 
 
-def check(baseline: dict, current: dict, tolerance: float) -> int:
+def check(baseline: dict, current: dict, tolerance: float,
+          only_prefix: str = "") -> int:
     failures = []
-    for name, spec in sorted(baseline["rows"].items()):
+    gated = {n: s for n, s in baseline["rows"].items()
+             if n.startswith(only_prefix)}
+    if not gated:
+        print(f"no baseline rows match prefix {only_prefix!r}",
+              file=sys.stderr)
+        return 1
+    for name, spec in sorted(gated.items()):
         base = float(spec["value"])
         direction = spec.get("direction", "higher")
         tol = float(spec.get("tolerance", tolerance))
@@ -73,7 +81,7 @@ def check(baseline: dict, current: dict, tolerance: float) -> int:
         for f_ in failures:
             print(f"  {f_}", file=sys.stderr)
         return 1
-    print(f"\nall {len(baseline['rows'])} gated rows within "
+    print(f"\nall {len(gated)} gated rows within "
           f"{tolerance:.0%} of baseline")
     return 0
 
@@ -102,12 +110,16 @@ def main() -> int:
                                                  0.30)))
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline values from the CSV")
+    ap.add_argument("--only-prefix", default="",
+                    help="gate only baseline rows whose name starts with "
+                         "this prefix (e.g. serving/)")
     args = ap.parse_args()
     baseline = json.loads(Path(args.baseline).read_text())
     current = load_csv(args.csv)
     if args.update:
         return update(args.baseline, baseline, current)
-    return check(baseline, current, args.tolerance)
+    return check(baseline, current, args.tolerance,
+                 only_prefix=args.only_prefix)
 
 
 if __name__ == "__main__":

@@ -7,12 +7,12 @@ bench-smoke job runs it and uploads the CSV as an artifact so the perf
 trajectory is recorded per PR.
 
 Emits ``name,value,derived`` CSV rows (also saved to
-experiments/bench_results.csv), plus a machine-readable ``BENCH_7.json``
+experiments/bench_results.csv), plus a machine-readable ``BENCH_8.json``
 summary — per-bench best throughput, the train-step (fwd+bwd) rows,
-packed-vs-dense speedups and the parity gates — so the perf trajectory
-can be diffed across PRs without parsing the CSV.  (BENCH_5.json is the
-committed snapshot of the previous PR's sweep; the schema is documented
-in docs/benchmarks.md.)
+packed-vs-dense speedups, the serving-pipeline rows and the parity
+gates — so the perf trajectory can be diffed across PRs without parsing
+the CSV.  (BENCH_7.json is the committed snapshot of the previous PR's
+sweep; the schema is documented in docs/benchmarks.md.)
 """
 from __future__ import annotations
 
@@ -86,9 +86,9 @@ def main() -> int:
     print(f"# wrote {out}")
 
     summary = summarize(rows(), smoke=args.smoke)
-    Path("BENCH_7.json").write_text(json.dumps(summary, indent=2,
+    Path("BENCH_8.json").write_text(json.dumps(summary, indent=2,
                                                sort_keys=True) + "\n")
-    print("# wrote BENCH_7.json")
+    print("# wrote BENCH_8.json")
     return 0
 
 
@@ -112,7 +112,7 @@ def summarize(csv_rows, smoke: bool) -> dict:
             if value > best.get(bench, {}).get("value", 0.0):
                 best[bench] = {"row": name, "value": value}
     return {
-        "issue": 7,
+        "issue": 8,
         "smoke": smoke,
         "best_throughput": best,
         "train": {n: v for n, v, _ in parsed if "/train_" in n},
@@ -120,6 +120,9 @@ def summarize(csv_rows, smoke: bool) -> dict:
                             if "packed_speedup" in n},
         "queue": {n: v for n, v, _ in parsed
                   if "queue" in n or "quant" in n},
+        "serving": {n: v for n, v, _ in parsed
+                    if n.startswith("serving/")
+                    and isinstance(v, float)},
         "parity": {n: v for n, v, _ in parsed if "parity" in n},
         "fill_factor": {n: v for n, v, _ in parsed
                         if "fill_factor" in n},

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.plan import PreparedPlan, wrap_plan
 from repro.core.tiled import (DeviceBudgetExceeded, TiledExecutor,
                               dense_footprint_bytes,
                               make_streamed_aggregate)
@@ -621,10 +622,10 @@ def _maybe_fold_rel_norm(g: COOGraph, cfg: EnGNConfig, rel_normed: bool):
 def prepare_tiled(g: COOGraph, cfg: EnGNConfig,
                   out_dim: Optional[int] = None,
                   impl: Optional[str] = None,
-                  rel_normed: bool = False) -> Dict[str, Any]:
-    """Build the graph dict for the streamed out-of-core backend: the
-    Q x Q edge-tile store stays in host memory; tile/chunk sizes are
-    fitted to the device budget for the layer's wider feature dim."""
+                  rel_normed: bool = False) -> PreparedPlan:
+    """Build the `PreparedPlan` for the streamed out-of-core backend:
+    the Q x Q edge-tile store stays in host memory; tile/chunk sizes
+    are fitted to the device budget for the layer's wider feature dim."""
     h = out_dim if out_dim is not None else cfg.out_dim
     g, _ = _maybe_fold_rel_norm(g, cfg, rel_normed)
     # training pre-sizes the streaming step for the backward sweeps:
@@ -648,7 +649,8 @@ def prepare_tiled(g: COOGraph, cfg: EnGNConfig,
     # which streaming regime this config/graph pair actually lands in
     # (the plan is per feature dim; h is the layer's streamed width)
     qplan = ex.queue_plan(max(cfg.in_dim, h), "sum")
-    return {"n": g.num_vertices, "backend": "tiled", "tiled_exec": ex,
+    return wrap_plan(
+        {"n": g.num_vertices, "backend": "tiled", "tiled_exec": ex,
             "tiled_meta": {"q": ex.store.q, "tile": ex.store.tile,
                            "chunk": ex.chunk,
                            "order": tile_schedule_order(cfg.in_dim, h),
@@ -670,13 +672,13 @@ def prepare_tiled(g: COOGraph, cfg: EnGNConfig,
                            # against their real device memory
                            "resident_feature_bytes":
                                (2 if cfg.training else 1) * 4
-                               * g.num_vertices * (cfg.in_dim + h)}}
+                               * g.num_vertices * (cfg.in_dim + h)}})
 
 
 def prepare_ring(g: COOGraph, cfg: EnGNConfig,
                  out_dim: Optional[int] = None, plan=None, mesh=None,
-                 rel_normed: bool = False):
-    """Build the graph dict for the sharded ring backend (C2):
+                 rel_normed: bool = False) -> PreparedPlan:
+    """Build the `PreparedPlan` for the sharded ring backend (C2):
     destination vertices (and their stripe of edges) are partitioned
     across a ring mesh; each device keeps its stripe and accumulator
     resident while source-feature shards rotate with ppermute.
@@ -794,13 +796,16 @@ def prepare_ring(g: COOGraph, cfg: EnGNConfig,
                       "tile_format": "packed" if packed else "dense",
                       "stats": plan.stats(cfg.in_dim, h)},
     }
-    return d
+    return wrap_plan(d)
 
 
-def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
-    """Host-side 'format converter': build the device-side graph dict for
-    the chosen backend, including the adaptive tile-schedule decision and
-    the device-budget spill to the streamed tiled backend."""
+def prepare_graph(g: COOGraph, cfg: EnGNConfig,
+                  out_dim: Optional[int] = None) -> PreparedPlan:
+    """Host-side 'format converter': build the `PreparedPlan` (typed
+    attributes + the device-side carrier dict) for the chosen backend,
+    including the adaptive tile-schedule decision and the device-budget
+    spill to the streamed tiled backend.  The plan is a MutableMapping
+    over its carrier, so dict-style consumers are unaffected."""
     backend = cfg.backend
     h = out_dim if out_dim is not None else cfg.out_dim
     g, rel_normed = _maybe_fold_rel_norm(g, cfg, False)
@@ -834,7 +839,7 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
             d["rel"] = jnp.asarray(g.rel)
             d["num_relations"] = g.num_relations
             d["rel_normed"] = rel_normed
-        return d
+        return wrap_plan(d)
     if (backend == "blocked" and cfg.stage_contract == "typed"
             and g.rel is not None and g.num_relations > 1):
         return _prepare_blocked_typed(g, cfg, d, h)
@@ -937,7 +942,7 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
                     "device_bytes": tile_bytes,
                     "value_dtype": ("int8" if "packed_val_scale" in d
                                     else "fp32")}
-                return d
+                return wrap_plan(d)
         from repro.kernels.rer_spmm.ops import prepare_blocks
         b = coo_to_blocked(g, cfg.tile, order="column")
         blocks, brow, bcol = prepare_blocks(b.blocks, b.block_row,
@@ -949,14 +954,14 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig, out_dim: Optional[int] = None):
                             "order": order, "tile": b.tile,
                             "tile_format": "dense",
                             "format_choice": choice}
-        return d
+        return wrap_plan(d)
     if backend == "ring":
         return prepare_ring(g, cfg, out_dim, rel_normed=rel_normed)
     raise ValueError(backend)
 
 
 def _prepare_blocked_typed(g: COOGraph, cfg: EnGNConfig,
-                           d: Dict[str, Any], h: int) -> Dict[str, Any]:
+                           d: Dict[str, Any], h: int) -> PreparedPlan:
     """Device carriers for the typed contract on the blocked backend
     (DESIGN.md C10).  tile_format "dense" keeps one blocked-SpMM plan
     *per relation* (each contracts its own H-wide slice of the stacked
@@ -987,7 +992,7 @@ def _prepare_blocked_typed(g: COOGraph, cfg: EnGNConfig,
         d["blocks_meta"] = {"q": q, "padded": q * t, "order": order,
                             "tile": t, "tile_format": "dense",
                             "format_choice": None, "num_relations": r}
-        return d
+        return wrap_plan(d)
     store = build_tile_store(g, t)
     ps = pack_tile_store(store)
     from repro.kernels.rer_gather import ops as gather_ops
@@ -1001,4 +1006,4 @@ def _prepare_blocked_typed(g: COOGraph, cfg: EnGNConfig,
                         "order": order, "tile": store.tile,
                         "tile_format": "packed", "format_choice": None,
                         "num_relations": r}
-    return d
+    return wrap_plan(d)

@@ -1,0 +1,122 @@
+"""`PreparedPlan` — the typed result of every `prepare_*` call (DESIGN.md C12).
+
+`prepare_graph` / `prepare_tiled` / `prepare_ring` historically returned
+ad-hoc dicts that callers key-probed (``gd.get("ring_meta") or
+gd.get("tiled_meta")``, ``gd["blocks_meta"]["tile_format"]``, ...).  The
+dict *contents* differ per backend by design — each backend carries its
+own device operands — but the plan-level facts every caller wants are
+the same five questions: which backend did I actually land on (spill
+may have rerouted), which tile format, which streaming regime, how many
+bytes does the plan claim, and what did the autotuner decide.
+
+`PreparedPlan` answers those as typed attributes while remaining a
+`MutableMapping` over the underlying carrier dict, so every existing
+consumer (`EnGNLayer.apply` reads ``graph["backend"]`` / ``graph.get``,
+tests index ``gd["tiled_meta"]``, benches mutate entries) keeps working
+unchanged.  The dict view is the one-release compatibility shim: new
+code should read the attributes; ``as_dict()`` hands back the raw
+carrier for callers that need a plain dict.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import MutableMapping
+from typing import Any, Dict, Iterator, Optional
+
+
+@dataclasses.dataclass(eq=False)
+class PreparedPlan(MutableMapping):
+    """A prepared graph execution plan.
+
+    backend:         the backend the plan actually targets — after any
+                     budget spill, so ``backend`` may be "tiled" when
+                     the config asked for "blocked"/"ring".
+    tile_format:     "dense" | "packed" for the tile-carrying backends,
+                     None for segment (no tiles).
+    streaming_mode:  the tiled backend's landed regime ("chunk_queue" |
+                     "callback"), None for device-resident backends.
+    footprint_bytes: what the plan claims to occupy — device bytes for
+                     resident backends (per *shard* for ring), host
+                     store bytes + resident feature bytes for the
+                     streamed tiled backend.  Best-effort: 0 when the
+                     backend records no estimate (plain segment dicts).
+    autotune:        the `kernels/autotune.py` FormatChoice record when
+                     the tile format was autotuned, else None.
+    carrier:         the backend-specific operand dict (device arrays,
+                     executors, ring fns) — exactly the dict the
+                     prepare_* functions used to return.
+    """
+
+    backend: str
+    n: int
+    carrier: Dict[str, Any]
+    tile_format: Optional[str] = None
+    streaming_mode: Optional[str] = None
+    footprint_bytes: int = 0
+    autotune: Optional[Any] = None
+
+    # -- dict view (compatibility shim) --------------------------------
+    def __getitem__(self, key: str) -> Any:
+        return self.carrier[key]
+
+    def __setitem__(self, key: str, value: Any) -> None:
+        self.carrier[key] = value
+
+    def __delitem__(self, key: str) -> None:
+        del self.carrier[key]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.carrier)
+
+    def __len__(self) -> int:
+        return len(self.carrier)
+
+    def as_dict(self) -> Dict[str, Any]:
+        """The raw carrier dict (not a copy)."""
+        return self.carrier
+
+    @property
+    def meta(self) -> Dict[str, Any]:
+        """The backend's meta block under one name: ``blocks_meta`` /
+        ``tiled_meta`` / ``ring_meta``, or {} (segment carries none)."""
+        return (self.carrier.get("blocks_meta")
+                or self.carrier.get("tiled_meta")
+                or self.carrier.get("ring_meta") or {})
+
+    def __repr__(self) -> str:  # the carrier holds device arrays — elide
+        return (f"PreparedPlan(backend={self.backend!r}, n={self.n}, "
+                f"tile_format={self.tile_format!r}, "
+                f"streaming_mode={self.streaming_mode!r}, "
+                f"footprint_bytes={self.footprint_bytes}, "
+                f"keys={sorted(self.carrier)})")
+
+
+def wrap_plan(carrier: Dict[str, Any]) -> PreparedPlan:
+    """Build the typed plan over a prepare_* carrier dict, deriving the
+    summary attributes from whichever meta block the backend wrote."""
+    if isinstance(carrier, PreparedPlan):        # idempotent (spill paths
+        return carrier                           # return wrapped plans)
+    backend = carrier.get("backend", "segment")
+    meta = (carrier.get("blocks_meta") or carrier.get("tiled_meta")
+            or carrier.get("ring_meta") or {})
+    footprint = int(meta.get("device_bytes") or 0)
+    if not footprint and backend in ("blocked", "fused"):
+        # dense block carriers predate the device_bytes estimate: price
+        # the uploaded operands directly
+        footprint = sum(int(getattr(v, "nbytes", 0))
+                        for v in carrier.values())
+    mode = meta.get("streaming_mode")
+    if backend == "tiled":
+        footprint = int(meta.get("host_bytes", 0)
+                        + meta.get("resident_feature_bytes", 0))
+        if mode == "auto":        # report the landed regime, not the ask
+            mode = "chunk_queue" if meta.get("queue_plan") else "callback"
+    return PreparedPlan(
+        backend=backend,
+        n=int(carrier.get("n", 0)),
+        carrier=carrier,
+        tile_format=meta.get("tile_format"),
+        streaming_mode=mode,
+        footprint_bytes=footprint,
+        autotune=meta.get("format_choice"),
+    )

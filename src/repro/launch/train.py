@@ -176,9 +176,11 @@ def run_gnn(args) -> None:
         steps=args.steps, hidden=args.gnn_hidden, batch=args.batch,
         ring_shards=args.gnn_shards,
         device_budget_bytes=args.device_budget or None)
-    meta = gd.get("ring_meta") or gd.get("tiled_meta") or {}
-    shown = {k: v for k, v in meta.items() if k not in ("mesh", "stats")}
-    print(f"gnn={args.gnn} backend={gd.get('backend')} "
+    # PreparedPlan (C12): typed plan attributes replace the historical
+    # key-probing of ring_meta/tiled_meta/blocks_meta
+    shown = {k: v for k, v in gd.meta.items() if k not in ("mesh", "stats")}
+    print(f"gnn={args.gnn} backend={gd.backend} "
+          f"format={gd.tile_format} footprint={gd.footprint_bytes} "
           f"meta={shown}", flush=True)
 
     losses = []

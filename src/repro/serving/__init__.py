@@ -1,8 +1,15 @@
 """GNN inference serving: continuous batching, L-hop subgraph inference,
-degree-aware result caching (DESIGN.md S7)."""
-from repro.serving.batcher import GNNBatcher, Request, Response
+degree-aware result caching (DESIGN.md S7), and the async SLO-driven
+pipeline with replication and workload generation (DESIGN.md C12)."""
+from repro.serving.batcher import AdmittedBatch, GNNBatcher, Request, Response
 from repro.serving.cache import DegreeAwareCache
 from repro.serving.engine import GNNServingEngine, ServingConfig
+from repro.serving.pipeline import ServingPipeline
+from repro.serving.replicate import ReplicatedServer
+from repro.serving.workload import (TimedRequest, WorkloadSpec, make_trace,
+                                    replay_closed, replay_timed)
 
-__all__ = ["GNNBatcher", "Request", "Response", "DegreeAwareCache",
-           "GNNServingEngine", "ServingConfig"]
+__all__ = ["AdmittedBatch", "GNNBatcher", "Request", "Response",
+           "DegreeAwareCache", "GNNServingEngine", "ServingConfig",
+           "ServingPipeline", "ReplicatedServer", "TimedRequest",
+           "WorkloadSpec", "make_trace", "replay_closed", "replay_timed"]

@@ -39,22 +39,41 @@ drop to the tiled executor.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engn import EnGNConfig
 from repro.core.tiled import TiledExecutor, dense_footprint_bytes
 from repro.graphs.format import COOGraph
 from repro.graphs.subgraph import SubgraphExtractor
 from repro.serving.batcher import GNNBatcher, Request, Response
 from repro.serving.cache import DegreeAwareCache
 
+# sentinel for the deprecated mirror fields below: distinguishes "caller
+# never passed this" from an explicit None
+_UNSET: Any = object()
+
 
 @dataclasses.dataclass
 class ServingConfig:
+    """Serving-loop knobs, with the *execution* knobs unified under an
+    embedded `EnGNConfig` (DESIGN.md C12).
+
+    Historically the budget / ring / streaming / quantisation switches
+    were mirrored here under serving-specific names; they now live on
+    ``engn`` (`device_budget_bytes`, `ring_shards`, `streaming_mode`,
+    `tile_value_dtype`) so serving and training read one config type.
+    The old field names still work for one release: passing them warns
+    `DeprecationWarning` and writes through to ``engn``; after
+    `__post_init__` they are plain resolved values, so existing readers
+    keep working either way.
+    """
+
     batch_size: int = 128
     max_wait_s: float = 0.005
     num_hops: Optional[int] = None    # default: one hop per model layer
@@ -63,23 +82,53 @@ class ServingConfig:
     cache_reserved_frac: float = 0.5  # DAVC reserved-line fraction
     coalesce: bool = True
     bucketing: bool = True            # pad subgraphs to pow2 shape buckets
-    # device-memory budget for per-batch subgraph inference; batches
-    # whose subgraph footprint exceeds it run via the streamed tiled
-    # executor (None/0 disables the guard)
-    device_budget_bytes: Optional[int] = None
+    # the embedded execution config: budget gate, ring shards, tiled
+    # streaming regime and value quantisation all resolve from here
+    engn: Optional[EnGNConfig] = None
     tiled_tile: int = 128             # interval size for tiled fallback
-    # streaming regime of the per-batch tiled fallback (DESIGN.md C11):
-    # "auto" runs over-budget batches as a device-resident chunk queue
-    # when their packed stream fits (one traced launch per aggregate
-    # instead of a per-chunk callback loop), "callback" forces the loop
-    tiled_streaming_mode: str = "auto"
-    # "fp32" | "int8": quantise the fallback's streamed tile values
-    tiled_value_dtype: str = "fp32"
-    # shard-aware gate: with ring_shards set, over-budget batches first
-    # try the sharded ring-tiled backend (budget interpreted per shard)
-    # before dropping to the streamed tiled executor
-    ring_shards: Optional[int] = None
     ring_tile: int = 32               # tile size for per-batch ring plans
+    # -- async pipeline (serving/pipeline.py, DESIGN.md C12) --------------
+    pipeline_depth: int = 2           # in-flight batches (double buffer)
+    extract_workers: int = 2          # subgraph-extraction thread pool
+    # under backlog, merge up to max_batch_factor batch budgets into one
+    # admission ticket: fewer, larger extractions with cross-request
+    # frontier dedup (hub neighbourhoods overlap under zipf traffic)
+    adaptive_batching: bool = True
+    max_batch_factor: int = 8
+    # default SLO applied to requests submitted without a deadline
+    # (None = no deadline; requests are never shed)
+    default_slo_s: Optional[float] = None
+    # speculatively precompute the pinned hub region of the cache at
+    # startup from the DAVC degree profile (engine.warm_fill)
+    warm_cache: bool = False
+    warm_cache_max: int = 512         # cap on hub vertices warm-filled
+    # -- deprecated mirrors (one release; set engn.* instead) -------------
+    device_budget_bytes: Any = _UNSET   # -> engn.device_budget_bytes
+    ring_shards: Any = _UNSET           # -> engn.ring_shards
+    tiled_streaming_mode: Any = _UNSET  # -> engn.streaming_mode
+    tiled_value_dtype: Any = _UNSET     # -> engn.tile_value_dtype
+
+    def __post_init__(self):
+        if self.engn is None:
+            # dims are per-model and unused at the config-carrier level;
+            # the engine reads them from its layer stack
+            self.engn = EnGNConfig(in_dim=0, out_dim=0, backend="segment")
+        mirrors = [
+            ("device_budget_bytes", "device_budget_bytes"),
+            ("ring_shards", "ring_shards"),
+            ("tiled_streaming_mode", "streaming_mode"),
+            ("tiled_value_dtype", "tile_value_dtype"),
+        ]
+        for old, new in mirrors:
+            v = getattr(self, old)
+            if v is not _UNSET:
+                warnings.warn(
+                    f"ServingConfig.{old} is deprecated; set "
+                    f"ServingConfig(engn=EnGNConfig(..., {new}=...)) "
+                    f"instead", DeprecationWarning, stacklevel=3)
+                setattr(self.engn, new, v)
+            # resolve the mirror so legacy readers see the live value
+            setattr(self, old, getattr(self.engn, new))
 
 
 def _next_pow2(n: int) -> int:
@@ -98,7 +147,8 @@ class GNNServingEngine:
     """
 
     def __init__(self, graph: COOGraph, x: np.ndarray, layers, params,
-                 config: Optional[ServingConfig] = None):
+                 config: Optional[ServingConfig] = None,
+                 extractor: Optional[SubgraphExtractor] = None):
         config = config if config is not None else ServingConfig()
         bad = [ly.name for ly in layers if ly.cfg.backend != "segment"]
         if bad:
@@ -112,7 +162,10 @@ class GNNServingEngine:
         self.params = params
         self.config = config
         self.num_hops = config.num_hops or len(layers)
-        self.extractor = SubgraphExtractor(graph)
+        # `extractor` may be shared across engines (ReplicatedServer runs
+        # N engines over one graph store); extraction is read-only numpy
+        # over the CSR, so sharing is thread-safe
+        self.extractor = extractor or SubgraphExtractor(graph)
         self.cache: Optional[DegreeAwareCache] = None
         if config.cache_capacity > 0:
             self.cache = DegreeAwareCache(
@@ -129,10 +182,19 @@ class GNNServingEngine:
         self._compiled: Dict = {}
         self.stats = {"subgraphs": 0, "subgraph_vertices": 0,
                       "subgraph_edges": 0, "compiles": 0,
-                      "tiled_batches": 0, "ring_batches": 0}
+                      "tiled_batches": 0, "ring_batches": 0,
+                      "warm_filled": 0}
+        self._compat = None           # lazy inline pipeline for step/drain
+        if config.warm_cache:
+            self.warm_fill(config.warm_cache_max)
 
     # -- public API --------------------------------------------------------
-    def submit(self, rid: int, vertex_ids: np.ndarray):
+    def submit(self, rid: int, vertex_ids: np.ndarray,
+               deadline_s: Optional[float] = None):
+        ids = self._validate(rid, vertex_ids)
+        self.batcher.submit(Request(rid, ids, deadline_s=deadline_s))
+
+    def _validate(self, rid: int, vertex_ids: np.ndarray) -> np.ndarray:
         ids = np.asarray(vertex_ids, np.int32)
         if ids.size == 0:
             raise ValueError(f"request {rid}: vertex_ids is empty")
@@ -141,20 +203,54 @@ class GNNServingEngine:
                 f"request {rid}: vertex ids must be in "
                 f"[0, {self.graph.num_vertices}), got "
                 f"[{ids.min()}, {ids.max()}]")
-        self.batcher.submit(Request(rid, ids))
+        return ids
 
     def step(self, force: bool = True) -> List[Response]:
-        return self.batcher.step(force=force)
+        """One synchronous serving step — a compatibility wrapper over
+        the async pipeline run inline (depth 1, no worker threads, no
+        adaptive merging), so both paths share one admission/flush
+        implementation (DESIGN.md C12)."""
+        return self._sync_pipeline().step(force=force)
 
     def drain(self) -> List[Response]:
-        return self.batcher.drain()
+        return self._sync_pipeline().drain()
+
+    def _sync_pipeline(self):
+        if self._compat is None:
+            from repro.serving.pipeline import ServingPipeline
+            self._compat = ServingPipeline(
+                self, depth=1, extract_workers=0, adaptive_batching=False)
+        return self._compat
+
+    def warm_fill(self, max_vertices: Optional[int] = None) -> int:
+        """Speculatively precompute embeddings for the cache's pinned hub
+        region (DESIGN.md C12): the DAVC degree profile already names the
+        vertices most likely to be requested under power-law traffic, so
+        filling them at startup converts first-touch misses into hits.
+        Returns the number of vertices filled."""
+        if self.cache is None or not self.cache.pinned_ids:
+            return 0
+        hubs = np.fromiter(self.cache.pinned_ids, np.int64,
+                           len(self.cache.pinned_ids)).astype(np.int32)
+        deg = self.graph.degrees()
+        hubs = hubs[np.argsort(-deg[hubs], kind="stable")]
+        if max_vertices is not None:
+            hubs = hubs[:max_vertices]
+        for i in range(0, hubs.size, self.config.batch_size):
+            chunk = np.unique(hubs[i:i + self.config.batch_size])
+            y = self._run_subgraph(chunk)
+            self.cache.insert(chunk, y)
+        self.stats["warm_filled"] += int(hubs.size)
+        return int(hubs.size)
 
     def reset_telemetry(self):
         """Zero all counters (cache *contents* and compiled programs are
         kept) — call between warm-up and measured traffic."""
-        self.batcher.reset_stats()
+        self.batcher.reset_telemetry()
         if self.cache is not None:
             self.cache.reset_stats()
+        if self._compat is not None:
+            self._compat.reset_telemetry()
         for k in self.stats:
             self.stats[k] = 0
 
@@ -167,18 +263,36 @@ class GNNServingEngine:
                                 hit_rate=self.cache.hit_rate())
         return out
 
-    # -- inference path (called by the batcher, one batch at a time) -------
-    def _infer_ids(self, ids: np.ndarray) -> np.ndarray:
+    # -- pipeline stage functions (DESIGN.md C12) --------------------------
+    # The async pipeline drives these directly: probe and finish touch the
+    # cache and MUST stay on the completion thread; extract is pure numpy
+    # over read-only CSR state and is safe to run on pool workers.
+    def _probe_batch(self, ids: np.ndarray):
+        """Cache-probe stage: split a batch into hits and the miss set."""
         ids = np.asarray(ids, np.int32)
         if self.cache is not None:
             mask, out = self.cache.lookup(ids)
         else:
             mask, out = np.zeros(ids.size, bool), None
         miss = np.unique(ids[~mask])
-        if miss.size == 0:
-            return out
-        y = self._run_subgraph(miss)                      # (|miss|, H)
-        if self.cache is not None:
+        return ids, mask, out, miss
+
+    def _extract_batch(self, miss: np.ndarray):
+        """Extraction stage (thread-safe, host-side): L-hop subgraph of
+        the miss set plus its gathered input features."""
+        sub = self.extractor.extract(miss, self.num_hops,
+                                     self.config.fanout)
+        xs = self.x[sub.vertices]
+        g = sub.graph
+        self.stats["subgraphs"] += 1
+        self.stats["subgraph_vertices"] += g.num_vertices
+        self.stats["subgraph_edges"] += g.num_edges
+        return sub, xs
+
+    def _finish_batch(self, ids, mask, out, miss, y) -> np.ndarray:
+        """Completion stage: insert fresh rows into the cache and scatter
+        hits + misses back into batch order."""
+        if self.cache is not None and miss.size:
             self.cache.insert(miss, y)
         if out is None:
             out = np.zeros((ids.size, y.shape[1]), np.float32)
@@ -186,15 +300,24 @@ class GNNServingEngine:
         out[rows] = y[np.searchsorted(miss, ids[rows])]
         return out
 
+    # -- inference path (called by the batcher, one batch at a time) -------
+    def _infer_ids(self, ids: np.ndarray) -> np.ndarray:
+        ids, mask, out, miss = self._probe_batch(ids)
+        if miss.size == 0:
+            return out
+        sub, xs = self._extract_batch(miss)
+        y = self._infer_batch(sub, xs)                    # (|miss|, H)
+        return self._finish_batch(ids, mask, out, miss, y)
+
     def _run_subgraph(self, seeds: np.ndarray) -> np.ndarray:
-        sub = self.extractor.extract(seeds, self.num_hops,
-                                     self.config.fanout)
+        return self._infer_batch(*self._extract_batch(seeds))
+
+    def _infer_batch(self, sub, xs: np.ndarray) -> np.ndarray:
+        """Inference stage (device-side): run the stack over one
+        extracted subgraph, routing over-budget batches through the
+        ring / streamed-tiled fallbacks."""
         g = sub.graph
-        self.stats["subgraphs"] += 1
-        self.stats["subgraph_vertices"] += g.num_vertices
-        self.stats["subgraph_edges"] += g.num_edges
-        xs = self.x[sub.vertices]
-        budget = self.config.device_budget_bytes
+        budget = self.config.engn.device_budget_bytes
         if budget and self._subgraph_footprint(g) > budget:
             ring_gd = self._try_ring_plan(g)
             if ring_gd is not None:
@@ -302,7 +425,7 @@ class GNNServingEngine:
         else None (the batch then falls back to host streaming).  The
         ring aggregate is built per aggregation op, so mixed-op stacks
         skip the ring path."""
-        p = self.config.ring_shards
+        p = self.config.engn.ring_shards
         if not p:
             return None
         ops = {ly.cfg.aggregate_op for ly in self.layers}
@@ -341,7 +464,7 @@ class GNNServingEngine:
                                      in_dim=max(dims),
                                      out_dim=max(dims),
                                      tile_format="packed")
-        if min(dense_b, packed_b) > self.config.device_budget_bytes:
+        if min(dense_b, packed_b) > self.config.engn.device_budget_bytes:
             return None
         if packed_b <= dense_b:
             plan = build_packed_ring_shards(g, p)
@@ -388,10 +511,10 @@ class GNNServingEngine:
         dims = ([self._staged_feat_dim(layer) for layer in self.layers]
                 + [layer.cfg.out_dim for layer in self.layers])
         ex = TiledExecutor(g, tile=self.config.tiled_tile,
-                           budget_bytes=self.config.device_budget_bytes,
+                           budget_bytes=self.config.engn.device_budget_bytes,
                            dim_hint=max(dims),
-                           streaming_mode=self.config.tiled_streaming_mode,
-                           value_dtype=self.config.tiled_value_dtype)
+                           streaming_mode=self.config.engn.streaming_mode,
+                           value_dtype=self.config.engn.tile_value_dtype)
         gd = {"n": g.num_vertices, "backend": "tiled", "tiled_exec": ex}
         y = np.asarray(xs, np.float32)
         for layer, p in zip(self.layers, self.params):

@@ -1,0 +1,171 @@
+"""Replicated serving: N pipelined engines over one shared graph store
+(DESIGN.md C12).
+
+One `GNNServingEngine` is single-accelerator by construction; past its
+saturation point the only lever left is replication.  `ReplicatedServer`
+runs N engines — each with its own batcher, cache and compiled-program
+set — over ONE `SubgraphExtractor` and one feature array: the CSR and
+features are read-only at serving time, so replicas share them instead
+of copying the graph per replica (the dominant memory term for large
+graphs).
+
+Requests are routed by a pluggable balancer:
+
+* ``round_robin``       — cycle through replicas; ignores load.
+* ``least_outstanding`` — pick the replica with the fewest queued +
+  in-flight vertices; adapts to skewed request sizes.
+* ``hub_affinity``      — hash the request's hottest (highest-degree)
+  vertex to a replica, falling back to least-outstanding for requests
+  touching no pinned hub.  Routes repeat traffic for a hub to the one
+  replica whose cache already holds it, trading perfect balance for
+  cache hit rate — the DAVC story (S7) applied across replicas.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.graphs.format import COOGraph
+from repro.graphs.subgraph import SubgraphExtractor
+from repro.serving.batcher import Response
+from repro.serving.engine import GNNServingEngine, ServingConfig
+from repro.serving.pipeline import ServingPipeline
+
+# balancer: (pipelines, vertex_ids) -> replica index
+Balancer = Callable[[Sequence[ServingPipeline], np.ndarray], int]
+
+
+def round_robin() -> Balancer:
+    counter = itertools.count()
+
+    def pick(pipelines, ids):
+        return next(counter) % len(pipelines)
+    return pick
+
+
+def _outstanding(pl: ServingPipeline) -> int:
+    return (pl.batcher.pending_vertices()
+            + sum(t.batch.ids.size for t in pl.inflight))
+
+
+def least_outstanding() -> Balancer:
+    def pick(pipelines, ids):
+        return min(range(len(pipelines)),
+                   key=lambda i: _outstanding(pipelines[i]))
+    return pick
+
+
+def hub_affinity(degrees: np.ndarray, pinned: frozenset) -> Balancer:
+    """Stick each pinned hub to one replica (by id hash) so its cached
+    embedding is probed where it was inserted; non-hub requests go to
+    the least-loaded replica."""
+    fallback = least_outstanding()
+
+    def pick(pipelines, ids):
+        hot = ids[np.argmax(degrees[ids])]
+        if int(hot) in pinned:
+            return int(hot) % len(pipelines)
+        return fallback(pipelines, ids)
+    return pick
+
+
+BALANCERS: Dict[str, Callable] = {
+    "round_robin": round_robin,
+    "least_outstanding": least_outstanding,
+    "hub_affinity": hub_affinity,
+}
+
+
+class ReplicatedServer:
+    """N pipelined serving engines over one shared graph store.
+
+    balancer: a `Balancer`, or one of "round_robin" /
+    "least_outstanding" / "hub_affinity".
+    """
+
+    def __init__(self, graph: COOGraph, x: np.ndarray, layers, params,
+                 replicas: int = 2,
+                 config: Optional[ServingConfig] = None,
+                 balancer="least_outstanding"):
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        config = config if config is not None else ServingConfig()
+        self.graph = graph
+        # ONE extractor (and one feature array) shared by every replica:
+        # both are read-only at serving time
+        self.extractor = SubgraphExtractor(graph)
+        self.engines: List[GNNServingEngine] = [
+            GNNServingEngine(graph, x, layers, params, config,
+                             extractor=self.extractor)
+            for _ in range(replicas)]
+        self.pipelines: List[ServingPipeline] = [
+            ServingPipeline(e) for e in self.engines]
+        if isinstance(balancer, str):
+            if balancer not in BALANCERS:
+                raise ValueError(
+                    f"unknown balancer {balancer!r}; expected one of "
+                    f"{sorted(BALANCERS)}")
+            if balancer == "hub_affinity":
+                pinned = frozenset().union(*(
+                    e.cache.pinned_ids if e.cache is not None
+                    else frozenset() for e in self.engines))
+                balancer = hub_affinity(graph.degrees(), pinned)
+            else:
+                balancer = BALANCERS[balancer]()
+        self.balancer: Balancer = balancer
+        self.routed = np.zeros(replicas, np.int64)   # requests per replica
+
+    # -- API (mirrors the single-engine pipeline) --------------------------
+    def submit(self, rid: int, vertex_ids: np.ndarray,
+               deadline_s: Optional[float] = None,
+               slo_s: Optional[float] = None) -> int:
+        """Route and queue one request; returns the replica index."""
+        ids = np.asarray(vertex_ids, np.int32)
+        i = self.balancer(self.pipelines, ids)
+        self.pipelines[i].submit(rid, ids, deadline_s=deadline_s,
+                                 slo_s=slo_s)
+        self.routed[i] += 1
+        return i
+
+    def pump(self, force: bool = True) -> List[Response]:
+        out: List[Response] = []
+        for pl in self.pipelines:
+            out.extend(pl.pump(force=force))
+        return out
+
+    def poll(self) -> List[Response]:
+        out: List[Response] = []
+        for pl in self.pipelines:
+            out.extend(pl.poll())
+        return out
+
+    def drain(self) -> List[Response]:
+        out: List[Response] = []
+        for pl in self.pipelines:
+            out.extend(pl.drain())
+        return out
+
+    def telemetry(self) -> Dict:
+        return {"replicas": len(self.pipelines),
+                "routed": self.routed.tolist(),
+                "engines": [pl.telemetry() for pl in self.pipelines]}
+
+    def reset_telemetry(self):
+        self.routed[:] = 0
+        for e in self.engines:
+            e.reset_telemetry()
+        for pl in self.pipelines:
+            pl.reset_telemetry()
+
+    def close(self):
+        for pl in self.pipelines:
+            pl.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
