@@ -1,0 +1,128 @@
+"""Fault tolerance: checkpoint overhead, recovery time, chaos throughput.
+
+Three recovery-path costs (DESIGN.md C13), measured on the real clock:
+
+* checkpoint overhead — synchronous vs async save of a training state
+  tree, and the per-step overhead of checkpointing every step;
+* re-mesh recovery — a ring training run loses a shard mid-run
+  (`ChaosInjector`); MTTR (failure -> resumed stepping, from the
+  runner's telemetry) and the re-plan cost (`prepare_ring` on the
+  survivor count, from the trainer's telemetry);
+* chaos throughput — end-to-end steps/s of the faulted run against the
+  fault-free run: the price of surviving.
+
+Rows are regression-gated via `check_regression.py --only-prefix fault/`
+(the chaos CI job) and by the main bench-smoke gate.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, scaled, time_fn
+
+
+def _state_tree(mb: float) -> dict:
+    """A training-state-shaped tree totalling ~`mb` MB (params + Adam
+    moments)."""
+    n = max(1, int(mb * 1e6 / 4 / 3 / 64))
+    rng = np.random.default_rng(0)
+    params = {"w": rng.standard_normal((n, 64)).astype(np.float32)}
+    return {"params": params,
+            "opt": {"m": {"w": np.zeros((n, 64), np.float32)},
+                    "v": {"w": np.zeros((n, 64), np.float32)},
+                    "count": np.int32(0)}}
+
+
+def _ckpt_overhead():
+    from repro.checkpoint.manager import CheckpointManager
+
+    tree = _state_tree(0.5 if common.SMOKE else 8.0)
+    sync_dir = tempfile.mkdtemp(prefix="bench_fault_sync_")
+    mgr = CheckpointManager(sync_dir, keep=2)
+    t_sync = time_fn(lambda: mgr.save(1, tree))
+    emit("fault/ckpt/save_sync_us", f"{t_sync:.1f}")
+
+    async_dir = tempfile.mkdtemp(prefix="bench_fault_async_")
+    amgr = CheckpointManager(async_dir, keep=2, async_save=True)
+
+    def async_save():
+        amgr.save(1, tree)          # snapshot is sync, write is hidden
+
+    t_async = time_fn(async_save)
+    amgr.wait()
+    emit("fault/ckpt/save_async_us", f"{t_async:.1f}")
+    emit("fault/ckpt/async_hide_ratio", f"{t_sync / max(t_async, 1e-9):.2f}",
+         "sync save time / caller-visible async save time")
+
+
+def _build_ring(steps: int, shards: int):
+    from repro.launch.train import build_gnn
+
+    mv, me = scaled(1500, 9000)
+    return build_gnn(model="gcn", dataset="pubmed", backend="ring",
+                     steps=steps, hidden=8, batch=64, ring_shards=shards,
+                     max_vertices=mv, max_edges=me)
+
+
+def _recovery():
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.distributed.chaos import ChaosInjector, FaultEvent, FaultPlan
+    from repro.distributed.fault import FaultConfig, FaultTolerantRunner
+
+    steps = 6 if common.SMOKE else 16
+    shards = 2 if common.SMOKE else 4
+
+    # ---- fault-free reference run (same workload, no injection)
+    step, state, data, _gd, _aux = _build_ring(steps, shards)
+    ps, opt = state["params"], state["opt"]
+    ps, opt, _ = step(ps, opt, next(data))      # compile outside timing
+    data.seek(0)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        ps, opt, _ = step(ps, opt, next(data))
+    clean_s = time.perf_counter() - t0
+    emit("fault/clean/steps_per_s", f"{steps / clean_s:.2f}")
+
+    # ---- chaos run: lose a shard mid-run, re-mesh, resume
+    step, state, data, _gd, aux = _build_ring(steps, shards)
+    trainer = aux["trainer"]
+    step(state["params"], state["opt"], next(data))     # compile
+    data.seek(0)
+    plan = FaultPlan((FaultEvent(max(1, steps // 2), "shard_loss",
+                                 lost_shards=1),))
+    inj = ChaosInjector(plan)                   # real clock: no straggler
+    mgr = CheckpointManager(tempfile.mkdtemp(prefix="bench_fault_ring_"),
+                            keep=2)
+    runner = FaultTolerantRunner(
+        inj.wrap_step(step), inj.wrap_checkpoint(mgr),
+        FaultConfig(ckpt_every=2, retry_backoff_s=0.01),
+        on_failure=trainer.on_failure,
+        on_straggler=trainer.on_straggler)
+    t0 = time.perf_counter()
+    state, last = runner.run(state, data, num_steps=steps)
+    chaos_s = time.perf_counter() - t0
+    mgr.wait()
+    assert last == steps and inj.stats["shard_loss"] == 1
+    assert trainer.stats["remesh_count"] == 1
+
+    emit("fault/chaos/steps_per_s", f"{steps / chaos_s:.2f}",
+         f"shard loss at step {plan.events[0].step}, "
+         f"remeshed {shards}->{trainer.plan.meta.get('shards')}")
+    emit("fault/chaos/slowdown_vs_clean", f"{chaos_s / clean_s:.2f}",
+         "chaos wall time / fault-free wall time (incl. re-jit)")
+    emit("fault/remesh/mttr_us", f"{runner.stats['mttr_s'] * 1e6:.1f}",
+         "failure -> restored state (backoff + re-plan + restore)")
+    emit("fault/remesh/replan_us",
+         f"{trainer.stats['remesh_s'] * 1e6:.1f}",
+         "prepare_ring on the survivor count")
+    emit("fault/remesh/lost_steps", f"{runner.stats['lost_steps']:.0f}",
+         "steps replayed from the restored checkpoint")
+
+
+def run():
+    _ckpt_overhead()
+    _recovery()

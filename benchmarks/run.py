@@ -7,12 +7,12 @@ bench-smoke job runs it and uploads the CSV as an artifact so the perf
 trajectory is recorded per PR.
 
 Emits ``name,value,derived`` CSV rows (also saved to
-experiments/bench_results.csv), plus a machine-readable ``BENCH_8.json``
+experiments/bench_results.csv), plus a machine-readable ``BENCH_9.json``
 summary — per-bench best throughput, the train-step (fwd+bwd) rows,
-packed-vs-dense speedups, the serving-pipeline rows and the parity
-gates — so the perf trajectory can be diffed across PRs without parsing
-the CSV.  (BENCH_7.json is the committed snapshot of the previous PR's
-sweep; the schema is documented in docs/benchmarks.md.)
+packed-vs-dense speedups, the serving-pipeline rows, the fault-recovery
+rows and the parity gates — so the perf trajectory can be diffed across
+PRs without parsing the CSV.  (BENCH_8.json is the committed snapshot of
+the previous PR's sweep; the schema is documented in docs/benchmarks.md.)
 """
 from __future__ import annotations
 
@@ -37,7 +37,7 @@ from benchmarks import (bench_stage_breakdown, bench_edge_reorg,
                         bench_dim_sensitivity, bench_dasr, bench_tiling,
                         bench_tiled_exec, bench_davc, bench_scaling,
                         bench_throughput, bench_ablation, bench_serving,
-                        bench_ring_tiled)
+                        bench_ring_tiled, bench_fault)
 from benchmarks import common
 from benchmarks.common import rows
 
@@ -54,6 +54,7 @@ BENCHES = {
     "fig17": bench_scaling,             # PE/ring scaling
     "ablation": bench_ablation,         # technique-by-technique
     "serving": bench_serving,           # serving engine req/s + cache
+    "fault": bench_fault,               # recovery time + ckpt overhead
 }
 
 
@@ -86,9 +87,9 @@ def main() -> int:
     print(f"# wrote {out}")
 
     summary = summarize(rows(), smoke=args.smoke)
-    Path("BENCH_8.json").write_text(json.dumps(summary, indent=2,
+    Path("BENCH_9.json").write_text(json.dumps(summary, indent=2,
                                                sort_keys=True) + "\n")
-    print("# wrote BENCH_8.json")
+    print("# wrote BENCH_9.json")
     return 0
 
 
@@ -112,10 +113,12 @@ def summarize(csv_rows, smoke: bool) -> dict:
             if value > best.get(bench, {}).get("value", 0.0):
                 best[bench] = {"row": name, "value": value}
     return {
-        "issue": 8,
+        "issue": 9,
         "smoke": smoke,
         "best_throughput": best,
         "train": {n: v for n, v, _ in parsed if "/train_" in n},
+        "fault": {n: v for n, v, _ in parsed
+                  if n.startswith("fault/") and isinstance(v, float)},
         "packed_vs_dense": {n: v for n, v, _ in parsed
                             if "packed_speedup" in n},
         "queue": {n: v for n, v, _ in parsed

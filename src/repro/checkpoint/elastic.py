@@ -10,6 +10,7 @@ device count no longer divides it).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -19,22 +20,49 @@ from repro.distributed.sharding import param_shardings
 from repro.launch.mesh import make_elastic_mesh
 
 
+def _place_like_params(subtree, shardings):
+    """device_put a params-shaped subtree (opt `m`/`v` mirror params)."""
+    return jax.tree.map(jax.device_put, subtree, shardings)
+
+
 def elastic_restore(cfg, ckpt: CheckpointManager, tree_like,
                     n_devices: Optional[int] = None,
-                    model_parallel: int = 16):
-    """Returns (mesh, restored_tree, metadata, step)."""
+                    model_parallel: int = 16,
+                    shardings=None,
+                    on_placement_error: str = "warn"):
+    """Returns (mesh, restored_tree, metadata, step).
+
+    Params AND the params-shaped optimizer moments (`opt["m"]`,
+    `opt["v"]`) are re-placed under the surviving mesh's shardings.
+    `shardings` overrides the derived `param_shardings(cfg, mesh)` (a
+    params-shaped pytree of NamedSharding).  Placement failures are
+    loud: `on_placement_error="warn"` (default) keeps the host-resident
+    arrays and emits a RuntimeWarning; `"raise"` propagates.
+    """
+    if on_placement_error not in ("warn", "raise"):
+        raise ValueError(f"on_placement_error={on_placement_error!r}")
     mesh = make_elastic_mesh(n_devices, model_parallel)
-    sh = param_shardings(cfg, mesh)
+    sh = param_shardings(cfg, mesh) if shardings is None else shardings
     tree, meta, step = ckpt.restore(tree_like, shardings=None)
-    # place params under the new mesh sharding; opt state mirrors params
-    placed = jax.tree.map(lambda a: a, tree)
+    if not (isinstance(tree, dict) and "params" in tree):
+        return mesh, tree, meta, step
     try:
-        placed = {
-            **tree,
-            "params": jax.tree.map(jax.device_put, tree["params"], sh),
-        } if isinstance(tree, dict) and "params" in tree else tree
-    except Exception:
-        pass
+        placed = dict(tree)
+        placed["params"] = _place_like_params(tree["params"], sh)
+        if isinstance(tree.get("opt"), dict):
+            opt = dict(tree["opt"])
+            for moment in ("m", "v"):
+                if moment in opt:
+                    opt[moment] = _place_like_params(opt[moment], sh)
+            placed["opt"] = opt
+    except Exception as e:  # noqa: BLE001 — surfaced, never swallowed
+        if on_placement_error == "raise":
+            raise
+        warnings.warn(
+            f"elastic_restore: placement onto {mesh.shape} failed "
+            f"({e!r}); returning host-resident arrays",
+            RuntimeWarning, stacklevel=2)
+        return mesh, tree, meta, step
     return mesh, placed, meta, step
 
 

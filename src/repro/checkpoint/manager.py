@@ -17,11 +17,21 @@ import os
 import shutil
 import threading
 import time
+import warnings
 from pathlib import Path
 from typing import Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint write or read failed."""
+
+
+class CorruptCheckpointError(CheckpointError):
+    """A checkpoint directory exists but its contents are unreadable
+    (truncated manifest, missing leaf file, torn npy)."""
 
 
 def _flatten_with_names(tree):
@@ -42,25 +52,39 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._async_error: Optional[BaseException] = None
 
     # ------------------------------------------------------------ save
     def save(self, step: int, tree, metadata: Optional[dict] = None):
         """Atomic save.  With async_save=True the device->host transfer is
-        synchronous (snapshot) but the disk write happens on a thread."""
+        synchronous (snapshot) but the disk write happens on a thread;
+        a failure there is re-raised from the next save() or wait()."""
         flat, _ = _flatten_with_names(tree)
         host = [(n, np.asarray(jax.device_get(v))) for n, v in flat]
         if self.async_save:
-            self.wait()
+            self.wait()         # raises if the previous write failed
             self._thread = threading.Thread(
-                target=self._write, args=(step, host, metadata or {}))
+                target=self._write_async, args=(step, host, metadata or {}))
             self._thread.start()
         else:
             self._write(step, host, metadata or {})
 
+    def _write_async(self, step: int, host, metadata: dict):
+        try:
+            self._write(step, host, metadata)
+        except BaseException as e:  # noqa: BLE001 — surfaced in wait()
+            self._async_error = e
+
     def wait(self):
+        """Join any in-flight async write and re-raise its failure —
+        async errors must never vanish silently."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._async_error is not None:
+            err, self._async_error = self._async_error, None
+            raise CheckpointError(
+                f"async checkpoint write failed: {err!r}") from err
 
     def _write(self, step: int, host, metadata: dict):
         tmp = self.dir / f".tmp_step_{step}_{os.getpid()}"
@@ -109,20 +133,49 @@ class CheckpointManager:
                 shardings=None):
         """Restore into the structure of `tree_like`.  `shardings` (an
         optional matching pytree of NamedSharding) re-places each leaf —
-        this is where elastic re-meshing happens."""
-        if step is None:
-            step = self.latest_step()
-        if step is None:
+        this is where elastic re-meshing happens.
+
+        With `step=None`, a corrupt newest checkpoint (torn manifest,
+        missing leaf file) falls back to the next-newest complete one
+        with a RuntimeWarning instead of crashing; an explicit `step`
+        raises `CorruptCheckpointError`."""
+        if step is not None:
+            return self._restore_step(tree_like, step, shardings)
+        candidates = self.all_steps()
+        if not candidates:
             raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        last_err: Optional[Exception] = None
+        for s in reversed(candidates):
+            try:
+                return self._restore_step(tree_like, s, shardings)
+            except CorruptCheckpointError as e:
+                warnings.warn(
+                    f"checkpoint step {s} is corrupt ({e}); falling back "
+                    f"to the next-newest complete checkpoint",
+                    RuntimeWarning, stacklevel=2)
+                last_err = e
+        raise CorruptCheckpointError(
+            f"all {len(candidates)} checkpoint(s) in {self.dir} are "
+            f"corrupt") from last_err
+
+    def _restore_step(self, tree_like, step: int, shardings=None):
         d = self.dir / f"step_{step:010d}"
-        manifest = json.loads((d / "manifest.json").read_text())
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            raise CorruptCheckpointError(
+                f"unreadable manifest in {d}: {e}") from e
         flat, treedef = _flatten_with_names(tree_like)
         by_name = {n: i for i, n in enumerate(manifest["names"])}
         leaves = []
         for name, like in flat:
             if name not in by_name:
                 raise KeyError(f"checkpoint missing leaf {name}")
-            arr = np.load(d / f"{by_name[name]:05d}.npy")
+            try:
+                arr = np.load(d / f"{by_name[name]:05d}.npy")
+            except (OSError, EOFError, ValueError) as e:
+                raise CorruptCheckpointError(
+                    f"unreadable leaf {name} in {d}: {e}") from e
             like_shape = np.shape(like)     # works for arrays and scalars
             if tuple(arr.shape) != tuple(like_shape):
                 raise ValueError(

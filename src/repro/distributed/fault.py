@@ -69,8 +69,9 @@ class FaultTolerantRunner:
         self.clock = clock
         self.sleep = sleep
         self.timer = StepTimer(cfg.ewma_alpha, cfg.straggler_factor, clock)
-        self.stats: Dict[str, int] = {"failures": 0, "restores": 0,
-                                      "stragglers": 0, "saves": 0}
+        self.stats: Dict[str, float] = {"failures": 0, "restores": 0,
+                                        "stragglers": 0, "saves": 0,
+                                        "lost_steps": 0, "mttr_s": 0.0}
 
     def run(self, state: Dict[str, Any], data_iter, num_steps: int,
             start_step: int = 0):
@@ -79,6 +80,7 @@ class FaultTolerantRunner:
         step = start_step
         retries = 0
         while step < num_steps:
+            cursor0 = data_iter.cursor()
             try:
                 t0 = self.clock()
                 batch = next(data_iter)
@@ -100,6 +102,7 @@ class FaultTolerantRunner:
             except KeyboardInterrupt:
                 raise
             except Exception as e:  # noqa: BLE001 — that's the point
+                t_fail = self.clock()
                 self.stats["failures"] += 1
                 retries += 1
                 if retries > self.cfg.max_retries:
@@ -111,9 +114,17 @@ class FaultTolerantRunner:
                 self.sleep(self.cfg.retry_backoff_s * retries)
                 latest = self.ckpt.latest_step()
                 if latest is not None:
+                    failed_at = step
                     state, meta, step = self._restore(state)
                     data_iter.seek(meta.get("cursor", 0))
                     self.stats["restores"] += 1
+                    self.stats["lost_steps"] += max(0, failed_at - step)
+                else:
+                    # no checkpoint yet: rewind the consumed batch so
+                    # the retry replays exactly — without this the
+                    # sample is silently dropped.
+                    data_iter.seek(cursor0)
+                self.stats["mttr_s"] += self.clock() - t_fail
         return state, step
 
     def _restore(self, state_like):

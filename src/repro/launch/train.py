@@ -92,7 +92,8 @@ def build_gnn(*, model: str, dataset: str, backend: str, steps: int,
               hidden: int = 32, batch: int = 256,
               ring_shards=None, device_budget_bytes=None,
               max_vertices: int = 4000, max_edges: int = 30_000,
-              peak_lr: float = 5e-3, seed: int = 0):
+              peak_lr: float = 5e-3, seed: int = 0,
+              strike_limit: int = 3):
     """Assemble (train_step, init_state, data, graph_dict, aux) for a
     2-layer EnGN stack on any aggregation backend — the GNN counterpart
     of `build`.  `backend="ring"` trains on the sharded ring-tiled mesh
@@ -103,13 +104,18 @@ def build_gnn(*, model: str, dataset: str, backend: str, steps: int,
     it spill to the streamed out-of-core "tiled" backend, which trains
     through its custom_vjp reverse path — the backward pass re-streams
     the same host tiles transposed (DESIGN.md C9), so the largest
-    graphs are trainable under the same budget that serves them."""
+    graphs are trainable under the same budget that serves them.
+
+    The returned step is owned by an `ElasticGNNTrainer`
+    (`aux["trainer"]`): its `on_failure`/`on_straggler` hooks re-mesh
+    the ring to the surviving shard count and re-jit in place
+    (DESIGN.md C13)."""
     from repro.core.engn import prepare_graph
     from repro.core.models import apply_stack, init_stack, make_gnn_stack
     from repro.data.pipeline import GraphNodeStream
     from repro.graphs.generate import make_dataset, random_features
+    from repro.launch.elastic_gnn import ElasticGNNTrainer
     from repro.training.optimizer import init_opt_state
-    from repro.training.train_lib import make_gnn_train_step
 
     g, f, classes = make_dataset(dataset, max_vertices=max_vertices,
                                  max_edges=max_edges)
@@ -143,39 +149,40 @@ def build_gnn(*, model: str, dataset: str, backend: str, steps: int,
         # pre-size the streamed executor for the backward sweeps (C9)
         layer.cfg.training = True
     params = init_stack(layers, jax.random.key(seed))
-    gd = prepare_graph(gn, layers[0].cfg, out_dim=hidden)
-
-    def loss_fn(ps, batch):
-        nodes = jnp.asarray(batch["nodes"])
-        labels = y_true[nodes]
-        logits = apply_stack(layers, ps, gd, x)[nodes]
-        ll = jax.nn.log_softmax(logits, -1)
-        return -jnp.mean(jnp.take_along_axis(ll, labels[:, None], 1))
 
     # a budget spill to gd["backend"] == "tiled" trains too: the
     # streamed aggregate carries a custom_vjp whose backward re-streams
     # the transposed tile store, so the jitted step differentiates
-    # through the out-of-core path (DESIGN.md C9)
-    step = make_gnn_train_step(loss_fn, peak_lr=peak_lr,
-                               warmup=min(20, steps), total_steps=steps)
+    # through the out-of-core path (DESIGN.md C9).  The trainer owns
+    # the prepared plan + jitted step so the fault hooks can re-mesh.
+    trainer = ElasticGNNTrainer(layers=layers, graph=gn, x=x,
+                                y_true=y_true, hidden=hidden,
+                                peak_lr=peak_lr, steps=steps,
+                                strike_limit=strike_limit)
+    gd = trainer.plan
     data = GraphNodeStream(g.num_vertices, classes, batch=batch, seed=1)
     state = {"params": params, "opt": init_opt_state(params)}
     aux = {"layers": layers, "graph": gd, "x": x, "y_true": y_true,
-           "num_classes": classes}
-    return step, state, data, gd, aux
+           "num_classes": classes, "trainer": trainer}
+    return trainer.step, state, data, gd, aux
 
 
 def run_gnn(args) -> None:
     """--gnn entry point: fault-tolerant GNN training on the chosen
     aggregation backend (ring = the sharded ring-tiled device mesh;
     graphs over --device-budget train through the streamed out-of-core
-    executor automatically — C9)."""
+    executor automatically — C9).  Shard loss and chronic stragglers
+    re-mesh the ring to the survivors and resume from the mesh-agnostic
+    checkpoint (C13); `--chaos-seed` replays a deterministic fault
+    schedule against the run."""
     import tempfile
     step, state, data, gd, aux = build_gnn(
         model=args.gnn, dataset=args.dataset, backend=args.gnn_backend,
         steps=args.steps, hidden=args.gnn_hidden, batch=args.batch,
         ring_shards=args.gnn_shards,
-        device_budget_bytes=args.device_budget or None)
+        device_budget_bytes=args.device_budget or None,
+        strike_limit=args.straggler_strikes)
+    trainer = aux["trainer"]
     # PreparedPlan (C12): typed plan attributes replace the historical
     # key-probing of ring_meta/tiled_meta/blocks_meta
     shown = {k: v for k, v in gd.meta.items() if k not in ("mesh", "stats")}
@@ -195,8 +202,24 @@ def run_gnn(args) -> None:
 
     ckdir = args.ckpt_dir or tempfile.mkdtemp(prefix="engn_gnn_ckpt_")
     mgr = CheckpointManager(ckdir, keep=2, async_save=True)
-    runner = FaultTolerantRunner(logged, mgr,
-                                 FaultConfig(ckpt_every=args.ckpt_every))
+    step_fn, ckpt, clock_kw, injector = logged, mgr, {}, None
+    if args.chaos_seed is not None:
+        # deterministic fault schedule on a virtual clock (C13): shard
+        # loss, a transient blip, a straggler episode, a torn save
+        from repro.distributed.chaos import (ChaosInjector, FaultPlan,
+                                             VirtualClock)
+        clock = VirtualClock()
+        plan = FaultPlan.sample(args.chaos_seed, args.steps)
+        injector = ChaosInjector(plan, clock=clock)
+        step_fn = injector.wrap_step(logged)
+        ckpt = injector.wrap_checkpoint(mgr)
+        clock_kw = {"clock": clock, "sleep": clock.sleep}
+        print(f"chaos: {injector.describe()}", flush=True)
+    runner = FaultTolerantRunner(step_fn, ckpt,
+                                 FaultConfig(ckpt_every=args.ckpt_every),
+                                 on_failure=trainer.on_failure,
+                                 on_straggler=trainer.on_straggler,
+                                 **clock_kw)
     start = 0
     if mgr.latest_step() is not None:
         state, meta_d, start = mgr.restore(state)
@@ -207,7 +230,14 @@ def run_gnn(args) -> None:
     mgr.wait()
     traj = (f"loss {losses[0]:.3f} -> {losses[-1]:.3f}" if losses
             else "no steps run (checkpoint already at --steps)")
-    print(f"done: {last} steps, {traj}, saves={runner.stats['saves']}")
+    recov = (f", remesh={trainer.stats['remesh_count']} "
+             f"lost_steps={runner.stats['lost_steps']:.0f} "
+             f"mttr={runner.stats['mttr_s']:.2f}s"
+             if runner.stats["failures"] else "")
+    print(f"done: {last} steps, {traj}, saves={runner.stats['saves']}"
+          f"{recov}")
+    if injector is not None:
+        print(f"chaos fired: {injector.stats}", flush=True)
 
 
 def main():
@@ -235,6 +265,12 @@ def main():
     ap.add_argument("--micro-steps", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="replay a seeded fault schedule (GNN mode): "
+                         "shard loss, transient, straggler, torn save")
+    ap.add_argument("--straggler-strikes", type=int, default=3,
+                    help="straggler episodes before the ring sheds the "
+                         "slow shard (GNN mode)")
     ap.add_argument("--lr", type=float, default=3e-4)
     args = ap.parse_args()
 

@@ -50,6 +50,7 @@ class Request:
     delivered: int = 0                # ids whose outputs have arrived
     chunks: List[np.ndarray] = dataclasses.field(default_factory=list)
     t_first_batch: Optional[float] = None
+    failed: bool = False              # answered with status="error"
 
 
 @dataclasses.dataclass
@@ -59,7 +60,10 @@ class Response:
     latency_s: float
     queue_delay_s: float = 0.0        # submit -> first batch admission
     # "ok" = served; "expired" = shed by admission control (deadline
-    # unmeetable given the queue estimate) — outputs is then empty
+    # unmeetable given the queue estimate); "error" = a per-request
+    # inference/extraction failure (serving/pipeline.py maps the
+    # exception here instead of crashing the stage loop) — outputs is
+    # empty for both non-ok statuses
     status: str = "ok"
 
 
@@ -102,7 +106,8 @@ class GNNBatcher:
         self.queue: Deque[Request] = deque()
         self.stats: Dict[str, int] = {"batches": 0, "requests": 0,
                                       "padded": 0, "coalesced": 0,
-                                      "split_requests": 0, "shed": 0}
+                                      "split_requests": 0, "shed": 0,
+                                      "errors": 0}
         self._latencies: List[float] = []
         self._queue_delays: List[float] = []
 
@@ -183,9 +188,12 @@ class GNNBatcher:
         responses: List[Response] = []
         off = 0
         for r, k in batch.parts:
-            r.chunks.append(out[off:off + k])
-            r.delivered += k
+            chunk = out[off:off + k]
             off += k
+            if r.failed:
+                continue        # already answered with status="error"
+            r.chunks.append(chunk)
+            r.delivered += k
             if r.delivered == r.vertex_ids.size:
                 self.stats["requests"] += 1
                 lat = done - r.t_submit
@@ -193,6 +201,30 @@ class GNNBatcher:
                 responses.append(Response(
                     r.rid, np.concatenate(r.chunks), lat,
                     (r.t_first_batch or done) - r.t_submit))
+        return responses
+
+    def fail(self, batch: AdmittedBatch, now: Optional[float] = None
+             ) -> List[Response]:
+        """Answer every request touched by `batch` with
+        ``status="error"`` — the per-batch counterpart of `complete`
+        for an inference/extraction failure.  A failed request's
+        not-yet-admitted remainder is removed from the queue; slices
+        already in flight in *other* batches are dropped silently when
+        those batches complete."""
+        done = time.monotonic() if now is None else now
+        responses: List[Response] = []
+        for r, _k in batch.parts:
+            if r.failed:
+                continue
+            r.failed = True
+            self.stats["errors"] += 1
+            if r in self.queue:     # partially-admitted head request
+                self.queue.remove(r)
+            responses.append(Response(
+                r.rid, np.zeros((0, 0), np.float32),
+                done - r.t_submit,
+                (r.t_first_batch or done) - r.t_submit,
+                status="error"))
         return responses
 
     # -- deadline shedding (admission control, DESIGN.md C12) --------------

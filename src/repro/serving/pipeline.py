@@ -52,6 +52,13 @@ from repro.serving.batcher import AdmittedBatch, Response
 _EWMA_ALPHA = 0.3
 
 
+class EngineFailure(RuntimeError):
+    """The whole engine (device/replica) is unusable — escalate instead
+    of mapping to per-request errors.  `ReplicatedServer` catches this
+    to evict the replica and requeue its requests; everything else
+    raised inside a batch becomes ``Response.status == "error"``."""
+
+
 @dataclass
 class _Ticket:
     """One in-flight batch: the frozen admission record plus the probe
@@ -110,7 +117,8 @@ class ServingPipeline:
         self._ewma_s_per_vertex: Optional[float] = None
         self.stats: Dict[str, int] = {"pumped_batches": 0,
                                       "adaptive_merges": 0,
-                                      "inflight_hwm": 0}
+                                      "inflight_hwm": 0,
+                                      "batch_errors": 0}
 
     # -- submission --------------------------------------------------------
     def submit(self, rid: int, vertex_ids: np.ndarray,
@@ -174,7 +182,14 @@ class ServingPipeline:
                     t.future = self.pool.submit(
                         self.engine._extract_batch, miss)
                 else:
-                    t.extracted = self.engine._extract_batch(miss)
+                    try:
+                        t.extracted = self.engine._extract_batch(miss)
+                    except EngineFailure:
+                        raise
+                    except Exception:  # noqa: BLE001 — per-request error
+                        self.stats["batch_errors"] += 1
+                        responses.extend(self.batcher.fail(batch, now))
+                        continue
             self.inflight.append(t)
             self.stats["pumped_batches"] += 1
             self.stats["inflight_hwm"] = max(self.stats["inflight_hwm"],
@@ -185,14 +200,23 @@ class ServingPipeline:
     # -- completion (FIFO) -------------------------------------------------
     def _complete_head(self) -> List[Response]:
         t = self.inflight.popleft()
-        if t.miss.size:
-            sub, xs = (t.future.result() if t.future is not None
-                       else t.extracted)
-            y = self.engine._infer_batch(sub, xs)
-            out = self.engine._finish_batch(t.ids, t.mask, t.out,
-                                            t.miss, y)
-        else:
-            out = t.out
+        try:
+            if t.miss.size:
+                sub, xs = (t.future.result() if t.future is not None
+                           else t.extracted)
+                y = self.engine._infer_batch(sub, xs)
+                out = self.engine._finish_batch(t.ids, t.mask, t.out,
+                                                t.miss, y)
+            else:
+                out = t.out
+        except EngineFailure:
+            # whole-replica failure: put the ticket back so an evicting
+            # ReplicatedServer can requeue its requests, then escalate
+            self.inflight.appendleft(t)
+            raise
+        except Exception:  # noqa: BLE001 — map to status="error"
+            self.stats["batch_errors"] += 1
+            return self.batcher.fail(t.batch, time.monotonic())
         now = time.monotonic()
         self._observe(t.batch, now - t.t_admit)
         if t.batch.ids.size:

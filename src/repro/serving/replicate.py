@@ -31,7 +31,7 @@ from repro.graphs.format import COOGraph
 from repro.graphs.subgraph import SubgraphExtractor
 from repro.serving.batcher import Response
 from repro.serving.engine import GNNServingEngine, ServingConfig
-from repro.serving.pipeline import ServingPipeline
+from repro.serving.pipeline import EngineFailure, ServingPipeline
 
 # balancer: (pipelines, vertex_ids) -> replica index
 Balancer = Callable[[Sequence[ServingPipeline], np.ndarray], int]
@@ -116,40 +116,105 @@ class ReplicatedServer:
                 balancer = BALANCERS[balancer]()
         self.balancer: Balancer = balancer
         self.routed = np.zeros(replicas, np.int64)   # requests per replica
+        self.alive: List[bool] = [True] * replicas
+        self.stats: Dict[str, int] = {"evictions": 0, "requeued": 0}
 
     # -- API (mirrors the single-engine pipeline) --------------------------
     def submit(self, rid: int, vertex_ids: np.ndarray,
                deadline_s: Optional[float] = None,
                slo_s: Optional[float] = None) -> int:
-        """Route and queue one request; returns the replica index."""
+        """Route and queue one request (alive replicas only); returns
+        the replica index."""
+        live = [i for i, ok in enumerate(self.alive) if ok]
+        if not live:
+            raise RuntimeError("no alive replicas (all evicted)")
         ids = np.asarray(vertex_ids, np.int32)
-        i = self.balancer(self.pipelines, ids)
+        j = self.balancer([self.pipelines[i] for i in live], ids)
+        i = live[j % len(live)]
         self.pipelines[i].submit(rid, ids, deadline_s=deadline_s,
                                  slo_s=slo_s)
         self.routed[i] += 1
         return i
 
+    # -- failure handling --------------------------------------------------
+    def evict(self, i: int) -> None:
+        """Remove replica `i` from the balancer and requeue its queued +
+        in-flight requests onto the survivors.  Raises when no replica
+        survives (the requests cannot be served anywhere)."""
+        pl = self.pipelines[i]
+        if not self.alive[i]:
+            return
+        self.alive[i] = False
+        self.stats["evictions"] += 1
+        # collect unique not-yet-answered requests: in-flight tickets
+        # first (admission order), then the still-queued tail
+        pending = {}
+        for t in pl.inflight:
+            for r, _k in t.batch.parts:
+                if not r.failed and r.rid not in pending:
+                    pending[r.rid] = r
+        for r in pl.batcher.queue:
+            if not r.failed and r.rid not in pending:
+                pending[r.rid] = r
+        pl.inflight.clear()
+        pl.batcher.queue.clear()
+        pl.close()
+        if not any(self.alive):
+            raise RuntimeError(
+                f"replica {i} failed and no replicas survive; "
+                f"{len(pending)} request(s) dropped")
+        for r in pending.values():
+            # resubmit the whole request fresh (at-least-once): slices
+            # lost with the dead replica are re-extracted by a survivor
+            self.submit(r.rid, r.vertex_ids, deadline_s=r.deadline_s)
+            self.stats["requeued"] += 1
+
+    def _each_alive(self):
+        for i, pl in enumerate(self.pipelines):
+            if self.alive[i]:
+                yield i, pl
+
     def pump(self, force: bool = True) -> List[Response]:
         out: List[Response] = []
-        for pl in self.pipelines:
-            out.extend(pl.pump(force=force))
+        for i, pl in self._each_alive():
+            try:
+                out.extend(pl.pump(force=force))
+            except EngineFailure:
+                self.evict(i)
         return out
 
     def poll(self) -> List[Response]:
         out: List[Response] = []
-        for pl in self.pipelines:
-            out.extend(pl.poll())
+        for i, pl in self._each_alive():
+            try:
+                out.extend(pl.poll())
+            except EngineFailure:
+                self.evict(i)
         return out
 
     def drain(self) -> List[Response]:
         out: List[Response] = []
-        for pl in self.pipelines:
-            out.extend(pl.drain())
+        progress = True
+        while progress:
+            progress = False
+            for i, pl in self._each_alive():
+                if not (pl.batcher.queue or pl.inflight):
+                    continue
+                progress = True
+                try:
+                    out.extend(pl.drain())
+                except EngineFailure:
+                    # evict() moves the dead replica's requests to the
+                    # survivors, whose queues the next sweep drains
+                    self.evict(i)
         return out
 
     def telemetry(self) -> Dict:
         return {"replicas": len(self.pipelines),
                 "routed": self.routed.tolist(),
+                "alive": list(self.alive),
+                "evictions": self.stats["evictions"],
+                "requeued": self.stats["requeued"],
                 "engines": [pl.telemetry() for pl in self.pipelines]}
 
     def reset_telemetry(self):

@@ -1,0 +1,147 @@
+"""Deterministic chaos injection (DESIGN.md C13): seeded plans, the
+fire-exactly-once contract, virtual-clock stragglers, torn checkpoint
+styles, and the wrapped-callable path used by the serving tests."""
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import SyntheticTokenStream
+from repro.distributed.chaos import (ChaosInjector, FaultEvent, FaultPlan,
+                                     ShardLossError, TransientError,
+                                     VirtualClock)
+from repro.distributed.fault import FaultConfig, FaultTolerantRunner
+
+
+# ------------------------------------------------------------------ plan
+def test_fault_plan_sample_deterministic():
+    a = FaultPlan.sample(11, 100)
+    b = FaultPlan.sample(11, 100)
+    assert a == b
+    c = FaultPlan.sample(12, 100)
+    assert a != c
+    assert sorted(e.kind for e in a.events) == sorted(
+        ["shard_loss", "transient", "straggler", "torn_ckpt"])
+    steps = [e.step for e in a.events]
+    assert len(set(steps)) == len(steps)        # distinct steps
+    assert all(1 <= s < 100 for s in steps)
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent(1, "meteor_strike")
+    with pytest.raises(ValueError, match="torn style"):
+        FaultEvent(1, "torn_ckpt", style="shredded")
+
+
+# ---------------------------------------------------------- fire-once
+def test_events_fire_exactly_once_across_replays():
+    """Retries re-invoke the wrapped step; each event still fires once."""
+    plan = FaultPlan((FaultEvent(2, "transient"),
+                      FaultEvent(4, "shard_loss", lost_shards=3)))
+    inj = ChaosInjector(plan)
+    calls = {"n": 0}
+
+    def step():
+        calls["n"] += 1
+        return calls["n"]
+
+    wrapped = inj.wrap_step(step)
+    out, raised = [], []
+    for _ in range(10):
+        try:
+            out.append(wrapped())
+        except ShardLossError as e:
+            raised.append(("shard_loss", e.lost_shards))
+        except TransientError:
+            raised.append(("transient", None))
+    assert raised == [("transient", None), ("shard_loss", 3)]
+    assert inj.stats["transient"] == 1 and inj.stats["shard_loss"] == 1
+    assert len(out) == 8                        # the other calls ran
+
+
+def test_shard_loss_error_payload():
+    e = ShardLossError(lost_shards=2)
+    assert e.lost_shards == 2 and "2 shard" in str(e)
+
+
+# ----------------------------------------------------- virtual clock
+def test_virtual_clock_straggler_detected():
+    """A scheduled straggler stretches the step on the virtual clock
+    far past the EWMA deadline; the runner's hook fires."""
+    clock = VirtualClock()
+    plan = FaultPlan((FaultEvent(6, "straggler", delay_s=50.0),))
+    inj = ChaosInjector(plan, clock=clock, base_step_s=1.0)
+    flagged = []
+    mgr_dir = None
+
+    def step(params, opt, batch):
+        return params + 1, opt, {}
+
+    import tempfile
+    mgr_dir = tempfile.mkdtemp(prefix="chaos_test_")
+    mgr = CheckpointManager(mgr_dir)
+    r = FaultTolerantRunner(
+        inj.wrap_step(step), mgr, FaultConfig(),
+        on_straggler=lambda s, dt: flagged.append((s, dt)),
+        clock=clock, sleep=clock.sleep)
+    data = SyntheticTokenStream(10, 1, 4)
+    state, last = r.run({"params": 0, "opt": 0}, data, num_steps=10)
+    assert last == 10 and state["params"] == 10
+    assert r.stats["stragglers"] == 1
+    assert len(flagged) == 1
+    (s, dt), = flagged
+    assert s == 6 and dt > 50.0
+
+
+# ------------------------------------------------------ torn writes
+def _tree(v=0.0):
+    return {"params": {"w": np.full((2, 2), v, np.float32)}}
+
+
+@pytest.mark.parametrize("style", ["tmp", "manifest", "leaf"])
+def test_torn_checkpoint_styles_leave_recoverable_state(tmp_path, style):
+    """Every torn style leaves the newest *complete* checkpoint
+    restorable — the save is sacrificed, never the history."""
+    mgr = CheckpointManager(tmp_path, keep=5)
+    plan = FaultPlan((FaultEvent(0, "torn_ckpt", style=style),))
+    inj = ChaosInjector(plan)
+    wrapped = inj.wrap_checkpoint(mgr)
+    mgr.save(1, _tree(1.0), metadata={"cursor": 1})
+    wrapped.save(2, _tree(2.0), metadata={"cursor": 2})   # torn
+    assert inj.stats["torn_ckpt"] == 1
+    if style == "leaf":
+        with pytest.warns(RuntimeWarning, match="corrupt"):
+            out, meta, step = mgr.restore(_tree())
+    else:
+        out, meta, step = mgr.restore(_tree())
+    assert step == 1 and meta["cursor"] == 1
+    np.testing.assert_array_equal(out["params"]["w"],
+                                  np.full((2, 2), 1.0, np.float32))
+    # the injector is transparent again after the event fired
+    wrapped.save(3, _tree(3.0), metadata={"cursor": 3})
+    mgr.wait()
+    _, meta, step = mgr.restore(_tree())
+    assert step == 3 and meta["cursor"] == 3
+
+
+def test_torn_checkpoint_passthrough_methods(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    inj = ChaosInjector(FaultPlan())
+    wrapped = inj.wrap_checkpoint(mgr)
+    wrapped.save(1, _tree(1.0))
+    assert wrapped.latest_step() == 1           # __getattr__ passthrough
+    assert wrapped.all_steps() == [1]
+
+
+# ------------------------------------------------- wrapped callables
+def test_wrap_callable_fails_at_scheduled_calls():
+    inj = ChaosInjector(FaultPlan())
+    fn = inj.wrap_callable(lambda v: v * 2, calls=(1, 3))
+    out = []
+    for k in range(5):
+        try:
+            out.append(fn(k))
+        except TransientError:
+            out.append("err")
+    assert out == [0, "err", 4, "err", 8]
+    assert inj.stats["transient"] == 2

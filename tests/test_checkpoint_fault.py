@@ -6,8 +6,10 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.checkpoint.elastic import adjust_microbatching
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.elastic import adjust_microbatching, elastic_restore
+from repro.checkpoint.manager import (CheckpointError,
+                                      CheckpointManager,
+                                      CorruptCheckpointError)
 from repro.data.pipeline import GraphNodeStream, SyntheticTokenStream
 from repro.distributed.fault import (FaultConfig, FaultTolerantRunner,
                                      StepTimer)
@@ -191,7 +193,175 @@ def test_straggler_hook_fires(tmp_path):
     assert r.stats["stragglers"] == 1
 
 
+# ------------------------------------------------------- async failures
+def test_async_save_failure_reraises(tmp_path, monkeypatch):
+    """An exception on the async writer thread must not vanish: it is
+    re-raised from wait() (and hence from the next save())."""
+    mgr = CheckpointManager(tmp_path, async_save=True)
+
+    def boom(step, host, metadata):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(mgr, "_write", boom)
+    mgr.save(1, _tree())
+    with pytest.raises(CheckpointError, match="disk full"):
+        mgr.wait()
+    # the error is consumed once raised; a healthy writer recovers
+    monkeypatch.undo()
+    mgr.save(2, _tree())
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_async_save_failure_surfaces_on_next_save(tmp_path, monkeypatch):
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    monkeypatch.setattr(mgr, "_write",
+                        lambda *a: (_ for _ in ()).throw(OSError("torn")))
+    mgr.save(1, _tree())
+    with pytest.raises(CheckpointError, match="torn"):
+        mgr.save(2, _tree())
+
+
+# --------------------------------------------------- corruption recovery
+def test_restore_falls_back_past_truncated_manifest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    for s in (1, 2, 3):
+        mgr.save(s, _tree(s))
+    mf = tmp_path / "step_0000000003" / "manifest.json"
+    mf.write_text(mf.read_text()[:10])
+    # a truncated manifest never looks complete: the newest complete
+    # checkpoint wins without even a warning
+    assert mgr.latest_step() == 2
+    out, _, step = mgr.restore(_tree())
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(_tree(2)["params"]["w"]))
+    assert step == 2
+
+
+def test_restore_falls_back_past_missing_leaf(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    for s in (1, 2, 3):
+        mgr.save(s, _tree(s))
+    (tmp_path / "step_0000000003" / "00000.npy").unlink()
+    assert mgr.latest_step() == 3      # manifest still claims complete
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        _, _, step = mgr.restore(_tree())
+    assert step == 2
+
+
+def test_restore_ignores_torn_tmp_dir(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    for s in (1, 2):
+        mgr.save(s, _tree(s))
+    torn = tmp_path / ".tmp_step_3_999"
+    torn.mkdir()
+    (torn / "00000.npy").write_bytes(b"\x93NUMPY torn")
+    bare = tmp_path / "step_0000000004"   # dir without any manifest
+    bare.mkdir()
+    _, _, step = mgr.restore(_tree())
+    assert step == 2
+
+
+def test_restore_explicit_corrupt_step_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree())
+    (tmp_path / "step_0000000001" / "00000.npy").unlink()
+    with pytest.raises(CorruptCheckpointError):
+        mgr.restore(_tree(), step=1)
+
+
+def test_restore_all_corrupt_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree())
+    (tmp_path / "step_0000000001" / "00000.npy").unlink()
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(CorruptCheckpointError, match="all 1"):
+            mgr.restore(_tree())
+
+
+# ---------------------------------------------------- pre-ckpt replay
+def test_runner_pre_checkpoint_replay_exact(tmp_path):
+    """A failure before the first checkpoint must rewind the consumed
+    batch: without the seek-back the sample is silently dropped."""
+    seen = []
+
+    class Step:
+        calls = 0
+
+        def __call__(self, params, opt, batch):
+            self.calls += 1
+            if self.calls == 2:
+                raise RuntimeError("boom before any checkpoint")
+            seen.append(int(batch["tokens"][0, 0]))
+            return params, opt, {}
+
+    mgr = CheckpointManager(tmp_path)
+    r = FaultTolerantRunner(Step(), mgr, FaultConfig(ckpt_every=100),
+                            sleep=lambda s: None)
+    data = SyntheticTokenStream(1000, 1, 4, seed=3)
+    r.run({"params": 0, "opt": 0}, data, num_steps=4)
+    ref = SyntheticTokenStream(1000, 1, 4, seed=3)
+    want = [int(next(ref)["tokens"][0, 0]) for _ in range(4)]
+    assert seen == want                 # batch 1 replayed, not dropped
+    assert r.stats["failures"] == 1 and r.stats["restores"] == 0
+
+
 # ---------------------------------------------------------------- elastic
+def _adam_tree(seed=0):
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal(4), jnp.float32)}
+    return {"params": params,
+            "opt": {"m": jax.tree.map(jnp.zeros_like, params),
+                    "v": jax.tree.map(jnp.ones_like, params),
+                    "count": jnp.asarray(3, jnp.int32)}}
+
+
+def test_elastic_restore_places_params_and_opt(tmp_path):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tree = _adam_tree()
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(3, tree, metadata={"cursor": 9})
+    mesh = make_elastic_mesh(1, 1)
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree["params"])
+    _, placed, meta, step = elastic_restore(
+        None, mgr, tree, n_devices=1, model_parallel=1, shardings=sh)
+    assert step == 3 and meta["cursor"] == 9
+    # params AND the params-shaped moments are device-placed
+    for leaf in (jax.tree.leaves(placed["params"])
+                 + jax.tree.leaves(placed["opt"]["m"])
+                 + jax.tree.leaves(placed["opt"]["v"])):
+        assert isinstance(leaf, jax.Array)
+        assert isinstance(leaf.sharding, NamedSharding)
+    assert int(placed["opt"]["count"]) == 3
+    np.testing.assert_allclose(np.asarray(placed["opt"]["v"]["b"]),
+                               np.ones(4))
+
+
+def test_elastic_restore_placement_failure_warns(tmp_path):
+    tree = _adam_tree()
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, tree)
+    bad = jax.tree.map(lambda _: "not-a-sharding", tree["params"])
+    with pytest.warns(RuntimeWarning, match="placement"):
+        _, placed, _, step = elastic_restore(
+            None, mgr, tree, n_devices=1, shardings=bad)
+    assert step == 1
+    # loud fallback: host-resident arrays, values intact
+    np.testing.assert_array_equal(np.asarray(placed["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+
+
+def test_elastic_restore_placement_failure_raises(tmp_path):
+    tree = _adam_tree()
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, tree)
+    bad = jax.tree.map(lambda _: "not-a-sharding", tree["params"])
+    with pytest.raises(Exception):
+        elastic_restore(None, mgr, tree, n_devices=1, shardings=bad,
+                        on_placement_error="raise")
+
+
 def test_adjust_microbatching_preserves_global_batch():
     for n_shards in (16, 12, 10, 7):
         per, micro = adjust_microbatching(256, n_shards)

@@ -1,0 +1,197 @@
+"""Serving robustness (DESIGN.md C13): per-request inference/extraction
+failures map to ``Response.status == "error"`` instead of crashing the
+stage loop, and `ReplicatedServer` evicts a failed engine from the
+balancer and requeues its in-flight requests onto the survivors."""
+import numpy as np
+import pytest
+
+from repro.distributed.chaos import ChaosInjector, FaultPlan
+from repro.serving.batcher import GNNBatcher, Request
+from repro.serving.engine import GNNServingEngine, ServingConfig
+from repro.serving.pipeline import EngineFailure, ServingPipeline
+from repro.serving.replicate import ReplicatedServer
+
+
+def _fixture(batch_size=16, **cfg_kw):
+    import jax
+    from repro.core.models import make_gnn_stack, init_stack
+    from repro.graphs.generate import rmat_graph, random_features
+
+    g = rmat_graph(300, 2400, seed=0).gcn_normalized()
+    x = random_features(300, 8, seed=1)
+    layers = make_gnn_stack("gcn", [8, 16, 4])
+    params = init_stack(layers, jax.random.key(0))
+    cfg = ServingConfig(batch_size=batch_size, cache_capacity=0, **cfg_kw)
+    return g, x, layers, params, cfg
+
+
+def _requests(n=24, n_vertices=300, seed=3):
+    rng = np.random.default_rng(seed)
+    return [(i, rng.integers(0, n_vertices,
+                             rng.integers(1, 9)).astype(np.int32))
+            for i in range(n)]
+
+
+# ----------------------------------------------------- batcher fail path
+def test_batcher_fail_answers_with_error_status():
+    b = GNNBatcher(None, batch_size=8)
+    b.submit(Request(1, np.arange(3, dtype=np.int32)))
+    b.submit(Request(2, np.arange(4, dtype=np.int32)))
+    batch = b.admit()
+    errs = b.fail(batch)
+    assert sorted(r.rid for r in errs) == [1, 2]
+    assert all(r.status == "error" and r.outputs.size == 0 for r in errs)
+    assert b.stats["errors"] == 2
+    assert not b.queue                  # nothing left to serve
+    # failing the same batch twice emits nothing new
+    assert b.fail(batch) == []
+
+
+def test_batcher_fail_removes_split_request_remainder():
+    """A partially-admitted head request is answered once and its
+    unadmitted tail leaves the queue; a later batch completing one of
+    its earlier slices stays silent."""
+    b = GNNBatcher(None, batch_size=4)
+    b.submit(Request(7, np.arange(10, dtype=np.int32)))
+    first = b.admit()                   # slices [0:4], request stays queued
+    second = b.admit()                  # slices [4:8]
+    errs = b.fail(second)
+    assert [r.rid for r in errs] == [7]
+    assert not b.queue                  # the tail [8:10] was evicted
+    # the in-flight first batch completes later: dropped silently
+    out = np.zeros((first.ids.size, 2), np.float32)
+    assert b.complete(first, out) == []
+
+
+# ----------------------------------------------- pipeline error mapping
+def test_pipeline_maps_inference_failure_to_error_response(monkeypatch):
+    pl = ServingPipeline(GNNServingEngine(*_fixture()[:4],
+                                          _fixture()[4]))
+    inj = ChaosInjector(FaultPlan())
+    # fail the 2nd inference only; the loop must keep serving
+    monkeypatch.setattr(pl.engine, "_infer_batch",
+                        inj.wrap_callable(pl.engine._infer_batch,
+                                          calls=(1,)))
+    for rid, ids in _requests(12):
+        pl.submit(rid, ids)
+    responses = pl.drain()
+    pl.close()
+    by_status = {}
+    for r in responses:
+        by_status.setdefault(r.status, []).append(r.rid)
+    assert by_status.get("error"), "no error responses mapped"
+    assert by_status.get("ok"), "the stage loop stopped serving"
+    assert len(responses) == 12         # every request answered
+    assert pl.stats["batch_errors"] >= 1
+
+
+def test_pipeline_maps_extraction_failure_to_error_response(monkeypatch):
+    g, x, layers, params, cfg = _fixture(extract_workers=0)
+    pl = ServingPipeline(GNNServingEngine(g, x, layers, params, cfg))
+    inj = ChaosInjector(FaultPlan())
+    monkeypatch.setattr(pl.engine, "_extract_batch",
+                        inj.wrap_callable(pl.engine._extract_batch,
+                                          calls=(0,)))
+    for rid, ids in _requests(8):
+        pl.submit(rid, ids)
+    responses = pl.drain()
+    pl.close()
+    statuses = {r.status for r in responses}
+    assert "error" in statuses and "ok" in statuses
+    assert len(responses) == 8
+
+
+def test_pipeline_pool_extraction_failure_maps_too(monkeypatch):
+    """With worker threads the extraction exception surfaces from the
+    future at completion time — same error mapping."""
+    g, x, layers, params, cfg = _fixture(extract_workers=2)
+    pl = ServingPipeline(GNNServingEngine(g, x, layers, params, cfg))
+    inj = ChaosInjector(FaultPlan())
+    monkeypatch.setattr(pl.engine, "_extract_batch",
+                        inj.wrap_callable(pl.engine._extract_batch,
+                                          calls=(0,)))
+    for rid, ids in _requests(8):
+        pl.submit(rid, ids)
+    responses = pl.drain()
+    pl.close()
+    statuses = {r.status for r in responses}
+    assert "error" in statuses and "ok" in statuses
+    assert len(responses) == 8
+
+
+def test_engine_failure_escalates_out_of_pipeline(monkeypatch):
+    pl = ServingPipeline(GNNServingEngine(*_fixture()[:4],
+                                          _fixture()[4]))
+
+    def dead(*a, **k):
+        raise EngineFailure("device lost")
+
+    monkeypatch.setattr(pl.engine, "_infer_batch", dead)
+    for rid, ids in _requests(4):
+        pl.submit(rid, ids)
+    with pytest.raises(EngineFailure):
+        pl.drain()
+    # the failed ticket was pushed back for an evicting caller
+    assert pl.inflight
+    pl.close()
+
+
+# -------------------------------------------------- replicated eviction
+def _replicated(replicas=2, **cfg_kw):
+    g, x, layers, params, cfg = _fixture(**cfg_kw)
+    return ReplicatedServer(g, x, layers, params, replicas=replicas,
+                            config=cfg, balancer="round_robin")
+
+
+def test_replicated_server_evicts_and_requeues(monkeypatch):
+    srv = _replicated(replicas=2)
+
+    def dead(*a, **k):
+        raise EngineFailure("replica 0 died")
+
+    monkeypatch.setattr(srv.engines[0], "_infer_batch", dead)
+    reqs = _requests(10)
+    for rid, ids in reqs:
+        srv.submit(rid, ids)
+    assert int(srv.routed[0]) > 0       # replica 0 got traffic
+    responses = srv.drain()
+    srv.close()
+    # every request answered ok by the survivor — at-least-once
+    ok = {r.rid for r in responses if r.status == "ok"}
+    assert ok == {rid for rid, _ in reqs}
+    tele = srv.telemetry()
+    assert tele["alive"] == [False, True]
+    assert tele["evictions"] == 1
+    assert tele["requeued"] > 0
+
+
+def test_evicted_replica_receives_no_traffic(monkeypatch):
+    srv = _replicated(replicas=3)
+    monkeypatch.setattr(
+        srv.engines[1], "_infer_batch",
+        lambda *a, **k: (_ for _ in ()).throw(EngineFailure("dead")))
+    for rid, ids in _requests(9):
+        srv.submit(rid, ids)
+    srv.drain()
+    routed_before = srv.routed.copy()
+    for rid, ids in _requests(9, seed=5):
+        srv.submit(1000 + rid, ids)
+    assert srv.routed[1] == routed_before[1]    # nothing new routed to 1
+    responses = srv.drain()
+    srv.close()
+    assert all(r.status == "ok" for r in responses)
+
+
+def test_all_replicas_evicted_raises(monkeypatch):
+    srv = _replicated(replicas=2)
+    for e in srv.engines:
+        monkeypatch.setattr(
+            e, "_infer_batch",
+            lambda *a, **k: (_ for _ in ()).throw(EngineFailure("dead")))
+    for rid, ids in _requests(4):
+        srv.submit(rid, ids)
+    with pytest.raises(RuntimeError, match="no replicas survive"):
+        srv.drain()
+    srv.close()
+    with pytest.raises(RuntimeError, match="no alive replicas"):
+        srv.submit(99, np.arange(3, dtype=np.int32))
