@@ -51,7 +51,7 @@ _CHILD = textwrap.dedent("""
         t0 = time.perf_counter()
         jax.block_until_ready(fn(x))
         ts.append(time.perf_counter() - t0)
-    meta = gd["ring_meta"]
+    meta = gd.meta
     s = meta["stats"].as_dict()
     print(f"RES us={np.median(ts) * 1e6:.1f}"
           f" edges={g.num_edges}"

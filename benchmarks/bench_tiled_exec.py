@@ -77,8 +77,8 @@ def run():
             tiled.cfg.device_budget_bytes = budget
             tiled.cfg.tile_format = fmt
             gt = prepare_graph(gn, tiled.cfg)
-            meta = gt["tiled_meta"]
-            ex: TiledExecutor = gt["tiled_exec"]
+            meta = gt.meta
+            ex: TiledExecutor = gt.carrier["tiled_exec"]
             tiled.apply(params, gt, x)           # warm the jit caches
             ex.reset_stats()
             layer_us[fmt] = _layer_time_us(
@@ -155,7 +155,7 @@ def run():
         t_layer.cfg.device_budget_bytes = budget
         t_layer.cfg.training = True
         gtt = prepare_graph(gn, t_layer.cfg)
-        ex_t = gtt["tiled_exec"]
+        ex_t = gtt.carrier["tiled_exec"]
         params_t = t_layer.init(jax.random.key(1))
 
         def tiled_loss(p, xx):
@@ -167,7 +167,7 @@ def run():
         t_train = _median_us(tiled_step, params_t, xj, iters=3)
         s = ex_t.stats
         emit(f"tiled/{ds}/train_fwdbwd_us", round(t_train, 1),
-             f"streamed VJP fmt={gtt['tiled_meta']['tile_format']} "
+             f"streamed VJP fmt={gtt.meta['tile_format']} "
              f"bwd_h2d_mb={(s.bwd_h2d_tile_bytes + s.bwd_h2d_x_bytes) / 1e6:.1f} "
              f"bwd_d2h_mb={s.bwd_d2h_bytes / 1e6:.1f}")
         emit(f"tiled/{ds}/train_fwdbwd_edges_per_s",
@@ -251,7 +251,7 @@ def run():
         # overlap ablation: double-buffered streaming vs serialised
         # (aggregate at the hidden dim — the post-DASR streamed width)
         xh = random_features(g.num_vertices, HIDDEN, seed=1)
-        meta = gt["tiled_meta"]
+        meta = gt.meta
         agg_db = TiledExecutor(gn, tile=meta["tile"], chunk=meta["chunk"],
                                double_buffer=True)
         agg_sq = TiledExecutor(gn, tile=meta["tile"], chunk=meta["chunk"],
@@ -282,8 +282,7 @@ def run():
         gb = prepare_graph(gg, blk.cfg)
         agg = jax.jit(lambda xx, _l=blk, _g=gb: _l._aggregate(_g, xx))
         agg_us[fmt] = _median_us(agg, xa)
-        fill = (gb["blocks_meta"]["format_choice"].dense_fill
-                if gb["blocks_meta"]["format_choice"] else 0.0)
+        fill = gb.autotune.dense_fill if gb.autotune else 0.0
         emit(f"tiled/gate/{fmt}_agg_us", round(agg_us[fmt], 1),
              f"E={gg.num_edges} tile_fill={fill:.4f}")
     emit("tiled/gate/packed_speedup",
@@ -311,19 +310,19 @@ def run():
         lay.cfg.device_budget_bytes = 600_000
         lay.cfg.training = True
         gms = prepare_graph(gs, lay.cfg)
-        assert gms["backend"] == "tiled", gms["backend"]
+        assert gms.backend == "tiled", gms.backend
         ps = lay.init(jax.random.key(9))
 
         def staged_loss(p, xx, _l=lay, _g=gms):
             return jnp.sum(_l.apply(p, _g, xx) * coef_s)
 
         step = jax.jit(jax.value_and_grad(staged_loss, argnums=(0, 1)))
-        ex_s = gms["tiled_exec"]
+        ex_s = gms.carrier["tiled_exec"]
         ex_s.reset_stats()
         t_us = _median_us(step, ps, xs, iters=3)
         st = ex_s.stats
         emit(f"tiled/staged/{model}_train_us", round(t_us, 1),
-             f"fmt={gms['tiled_meta']['tile_format']} "
+             f"fmt={gms.meta['tile_format']} "
              f"bwd_h2d_mb={(st.bwd_h2d_tile_bytes + st.bwd_h2d_x_bytes) / 1e6:.1f} "
              f"bwd_d2h_mb={st.bwd_d2h_bytes / 1e6:.1f}")
         emit(f"tiled/staged/{model}_train_edges_per_s",

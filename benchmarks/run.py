@@ -7,12 +7,13 @@ bench-smoke job runs it and uploads the CSV as an artifact so the perf
 trajectory is recorded per PR.
 
 Emits ``name,value,derived`` CSV rows (also saved to
-experiments/bench_results.csv), plus a machine-readable ``BENCH_9.json``
+experiments/bench_results.csv), plus a machine-readable ``BENCH_10.json``
 summary — per-bench best throughput, the train-step (fwd+bwd) rows,
 packed-vs-dense speedups, the serving-pipeline rows, the fault-recovery
-rows and the parity gates — so the perf trajectory can be diffed across
-PRs without parsing the CSV.  (BENCH_8.json is the committed snapshot of
-the previous PR's sweep; the schema is documented in docs/benchmarks.md.)
+rows, the dynamic-graph update rows and the parity gates — so the perf
+trajectory can be diffed across PRs without parsing the CSV.
+(BENCH_9.json is the committed snapshot of the previous PR's sweep; the
+schema is documented in docs/benchmarks.md.)
 """
 from __future__ import annotations
 
@@ -27,17 +28,31 @@ from pathlib import Path
 # 1-CPU host-callback deadlock workaround tests/conftest.py applies (a
 # jitted callback-loop bench on a single-lane XLA:CPU waits forever for
 # the core the outer program holds; see README "Tests").  An explicit
-# user-provided count is respected.
+# user-provided count is respected.  If jax was already imported with
+# an initialised backend the env write is a silent no-op and the
+# callback benches would deadlock on one lane — refuse loudly instead.
 _FLAG = "--xla_force_host_platform_device_count"
 if _FLAG not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = (
         os.environ.get("XLA_FLAGS", "") + " " + _FLAG + "=8").strip()
+    if "jax" in sys.modules:
+        import jax
+
+        if (jax.default_backend() == "cpu"
+                and jax.local_device_count() < 8):
+            raise RuntimeError(
+                f"benchmarks/run.py set XLA_FLAGS {_FLAG}=8 but jax "
+                f"had already initialised its backend with "
+                f"{jax.local_device_count()} CPU device(s); a 1-lane "
+                "XLA:CPU deadlocks in the host-callback benches.  "
+                f"Export XLA_FLAGS='{_FLAG}=8' before launching, or "
+                "avoid importing jax before benchmarks.run.")
 
 from benchmarks import (bench_stage_breakdown, bench_edge_reorg,
                         bench_dim_sensitivity, bench_dasr, bench_tiling,
                         bench_tiled_exec, bench_davc, bench_scaling,
                         bench_throughput, bench_ablation, bench_serving,
-                        bench_ring_tiled, bench_fault)
+                        bench_ring_tiled, bench_fault, bench_updates)
 from benchmarks import common
 from benchmarks.common import rows
 
@@ -55,6 +70,7 @@ BENCHES = {
     "ablation": bench_ablation,         # technique-by-technique
     "serving": bench_serving,           # serving engine req/s + cache
     "fault": bench_fault,               # recovery time + ckpt overhead
+    "updates": bench_updates,           # dynamic-graph delta merges
 }
 
 
@@ -87,9 +103,9 @@ def main() -> int:
     print(f"# wrote {out}")
 
     summary = summarize(rows(), smoke=args.smoke)
-    Path("BENCH_9.json").write_text(json.dumps(summary, indent=2,
-                                               sort_keys=True) + "\n")
-    print("# wrote BENCH_9.json")
+    Path("BENCH_10.json").write_text(json.dumps(summary, indent=2,
+                                                sort_keys=True) + "\n")
+    print("# wrote BENCH_10.json")
     return 0
 
 
@@ -113,7 +129,7 @@ def summarize(csv_rows, smoke: bool) -> dict:
             if value > best.get(bench, {}).get("value", 0.0):
                 best[bench] = {"row": name, "value": value}
     return {
-        "issue": 9,
+        "issue": 10,
         "smoke": smoke,
         "best_throughput": best,
         "train": {n: v for n, v, _ in parsed if "/train_" in n},
@@ -125,6 +141,9 @@ def summarize(csv_rows, smoke: bool) -> dict:
                   if "queue" in n or "quant" in n},
         "serving": {n: v for n, v, _ in parsed
                     if n.startswith("serving/")
+                    and isinstance(v, float)},
+        "updates": {n: v for n, v, _ in parsed
+                    if n.startswith("updates/")
                     and isinstance(v, float)},
         "parity": {n: v for n, v, _ in parsed if "parity" in n},
         "fill_factor": {n: v for n, v, _ in parsed

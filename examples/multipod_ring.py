@@ -31,7 +31,7 @@ def main():
     layer = make_gnn("gcn", 64, 32, backend="ring")
     params = layer.init(jax.random.key(0))
     gd = prepare_graph(g, layer.cfg)
-    meta = gd["ring_meta"]
+    meta = gd.meta
     stats = meta["stats"].as_dict()
     dense_mb = 4 * g.num_vertices ** 2 / 1e6
     unit = ("packed edge entries" if meta["tile_format"] == "packed"

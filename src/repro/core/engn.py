@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.plan import PreparedPlan, wrap_plan
+from repro.core.plan import PreparedPlan, plan_carrier, wrap_plan
 from repro.core.tiled import (DeviceBudgetExceeded, TiledExecutor,
                               dense_footprint_bytes,
                               make_streamed_aggregate)
@@ -218,8 +218,10 @@ class EnGNLayer:
     # -- forward ----------------------------------------------------------
     def apply(self, params, graph, x: jnp.ndarray,
               aggregate_fn: Optional[Callable] = None) -> jnp.ndarray:
-        """graph: dict from `prepare_graph` (device arrays, or the host
-        tile store when the effective backend is the streamed "tiled")."""
+        """graph: a `PreparedPlan` from `prepare_graph`, or its raw
+        carrier dict (device arrays, or the host tile store when the
+        effective backend is the streamed "tiled")."""
+        graph = plan_carrier(graph)
         spec = self.stage_spec()
         if spec is not None:
             if aggregate_fn is not None:
@@ -519,6 +521,7 @@ class EnGNLayer:
     # -- aggregation backends ---------------------------------------------
     def _aggregate(self, graph, feat: jnp.ndarray) -> jnp.ndarray:
         cfg = self.cfg
+        graph = plan_carrier(graph)   # stage entry point: plan or dict
         backend = graph.get("backend", cfg.backend)
         if backend == "segment":
             ev = feat[graph["src"]]
@@ -675,6 +678,64 @@ def prepare_tiled(g: COOGraph, cfg: EnGNConfig,
                                * g.num_vertices * (cfg.in_dim + h)}})
 
 
+def update_plan(plan: PreparedPlan, snapshot, cfg: EnGNConfig,
+                out_dim: Optional[int] = None) -> PreparedPlan:
+    """Re-price a `PreparedPlan` for one `EpochSnapshot` of graph
+    updates (DESIGN.md C14).
+
+    The streamed tiled backend absorbs the delta in place: the
+    executor's stores merge incrementally (`TiledExecutor.
+    apply_updates`, bitwise-equal to a fresh build), then the budget
+    gate re-fits the streaming step and re-prices the chunk-queue plan
+    for the *grown* store (queue pricing is n- and nnz-dependent, so
+    growth can demote a chunk-queue plan to the callback loop).  If the
+    update-time dim no longer fits the fitted step — e.g. the plan was
+    priced for inference and the update arrives under a training config
+    whose backward streams double the width — the plan falls back to a
+    full `prepare_tiled`, which re-fits the tile for the wider dim:
+    a re-plan, never a silent overflow.
+
+    Device-resident backends (segment / blocked / fused / ring) keep no
+    mergeable host store — their carriers are uploaded arrays — so the
+    epoch graph re-runs `prepare_graph`, which re-prices the dense
+    footprint and spills to tiled exactly as it would at cold start.
+    """
+    plan = wrap_plan(plan)
+    h = out_dim if out_dim is not None else cfg.out_dim
+    if plan.backend != "tiled":
+        return prepare_graph(snapshot.graph, cfg, out_dim)
+    if (cfg.rel_normalize and snapshot.graph.rel is not None
+            and snapshot.graph.num_relations > 1):
+        # folded relation norms are global (degree-dependent): an edge
+        # delta invalidates every folded weight, so merge has nothing
+        # to reuse — rebuild from the re-folded epoch graph
+        return prepare_tiled(snapshot.graph, cfg, out_dim)
+    ex: TiledExecutor = plan.carrier["tiled_exec"]
+    ex.apply_updates(snapshot)
+    dim = max(cfg.in_dim, h)
+    try:
+        ex.effective_chunk(dim * (2 if cfg.training else 1))
+    except DeviceBudgetExceeded:
+        # grown graph broke the fitted step: full re-plan re-fits
+        # tile/chunk (and the spill chain) for the new size
+        stats = ex.stats
+        new = prepare_tiled(snapshot.graph, cfg, out_dim)
+        nex: TiledExecutor = new.carrier["tiled_exec"]
+        nex.stats.delta_merges = stats.delta_merges
+        nex.stats.store_builds += stats.store_builds
+        return new
+    qplan = ex.queue_plan(dim, "sum")
+    meta = plan.carrier["tiled_meta"]
+    meta.update(q=ex.store.q, host_bytes=ex.store.nbytes(),
+                queue_plan=(dataclasses.asdict(qplan)
+                            if qplan else None),
+                resident_feature_bytes=(2 if cfg.training else 1) * 4
+                * snapshot.graph.num_vertices * (cfg.in_dim + h))
+    plan.carrier["n"] = snapshot.graph.num_vertices
+    # re-derive the typed summary over the refreshed carrier
+    return wrap_plan(dict(plan.carrier))
+
+
 def prepare_ring(g: COOGraph, cfg: EnGNConfig,
                  out_dim: Optional[int] = None, plan=None, mesh=None,
                  rel_normed: bool = False) -> PreparedPlan:
@@ -804,8 +865,7 @@ def prepare_graph(g: COOGraph, cfg: EnGNConfig,
     """Host-side 'format converter': build the `PreparedPlan` (typed
     attributes + the device-side carrier dict) for the chosen backend,
     including the adaptive tile-schedule decision and the device-budget
-    spill to the streamed tiled backend.  The plan is a MutableMapping
-    over its carrier, so dict-style consumers are unaffected."""
+    spill to the streamed tiled backend."""
     backend = cfg.backend
     h = out_dim if out_dim is not None else cfg.out_dim
     g, rel_normed = _maybe_fold_rel_norm(g, cfg, False)

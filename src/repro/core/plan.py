@@ -9,23 +9,22 @@ the same five questions: which backend did I actually land on (spill
 may have rerouted), which tile format, which streaming regime, how many
 bytes does the plan claim, and what did the autotuner decide.
 
-`PreparedPlan` answers those as typed attributes while remaining a
-`MutableMapping` over the underlying carrier dict, so every existing
-consumer (`EnGNLayer.apply` reads ``graph["backend"]`` / ``graph.get``,
-tests index ``gd["tiled_meta"]``, benches mutate entries) keeps working
-unchanged.  The dict view is the one-release compatibility shim: new
-code should read the attributes; ``as_dict()`` hands back the raw
-carrier for callers that need a plain dict.
+`PreparedPlan` answers those as typed attributes over the underlying
+carrier dict.  The `MutableMapping` dict view that bridged dict-style
+consumers for one release is gone: read the typed attributes, or reach
+the backend operands through ``plan.carrier[...]`` / ``as_dict()`` /
+``plan.meta``.  `plan_carrier` unwraps either a plan or a raw carrier
+dict — the consumers that accept both (`EnGNLayer.apply`, the serving
+engine's per-batch dicts) call it once at their entry point.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections.abc import MutableMapping
-from typing import Any, Dict, Iterator, Optional
+from typing import Any, Dict, Optional
 
 
 @dataclasses.dataclass(eq=False)
-class PreparedPlan(MutableMapping):
+class PreparedPlan:
     """A prepared graph execution plan.
 
     backend:         the backend the plan actually targets — after any
@@ -55,22 +54,6 @@ class PreparedPlan(MutableMapping):
     footprint_bytes: int = 0
     autotune: Optional[Any] = None
 
-    # -- dict view (compatibility shim) --------------------------------
-    def __getitem__(self, key: str) -> Any:
-        return self.carrier[key]
-
-    def __setitem__(self, key: str, value: Any) -> None:
-        self.carrier[key] = value
-
-    def __delitem__(self, key: str) -> None:
-        del self.carrier[key]
-
-    def __iter__(self) -> Iterator[str]:
-        return iter(self.carrier)
-
-    def __len__(self) -> int:
-        return len(self.carrier)
-
     def as_dict(self) -> Dict[str, Any]:
         """The raw carrier dict (not a copy)."""
         return self.carrier
@@ -89,6 +72,14 @@ class PreparedPlan(MutableMapping):
                 f"streaming_mode={self.streaming_mode!r}, "
                 f"footprint_bytes={self.footprint_bytes}, "
                 f"keys={sorted(self.carrier)})")
+
+
+def plan_carrier(graph: Any) -> Dict[str, Any]:
+    """The raw carrier dict of a plan-or-dict.  Dict-consuming code
+    (`EnGNLayer.apply`, the serving engine's raw per-batch carriers)
+    accepts either a `PreparedPlan` or a plain carrier dict; this is
+    the one unwrap point."""
+    return graph.carrier if isinstance(graph, PreparedPlan) else graph
 
 
 def wrap_plan(carrier: Dict[str, Any]) -> PreparedPlan:

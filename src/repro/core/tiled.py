@@ -467,6 +467,11 @@ class TiledStats:
     # equal in fp32 mode, ~4x apart in int8 mode (scales included)
     quant_val_bytes: int = 0
     raw_val_bytes: int = 0
+    # dynamic-graph accounting (DESIGN.md C14): full tile-store builds
+    # vs incremental epoch merges — a healthy update loop holds
+    # store_builds at 1 while delta_merges grows with the epochs
+    store_builds: int = 0
+    delta_merges: int = 0
 
     def add_backward(self, other: "TiledStats"):
         """Fold one backward sweep's forward-shaped counters (the
@@ -577,7 +582,7 @@ class TiledExecutor:
         self.x_cache_cap = max(2, x_cache)
         self.streaming_mode = streaming_mode
         self.value_dtype = value_dtype
-        self.stats = TiledStats()
+        self.stats = TiledStats(store_builds=1)
         self._xcache: OrderedDict = OrderedDict()
         self._transposed: Optional["TiledExecutor"] = None
         self._diff_cache: Dict[str, Callable] = {}
@@ -588,6 +593,7 @@ class TiledExecutor:
         """Fresh chunk-queue caches + error-feedback quantiser (called
         at construction and by `_from_stores` for derived views)."""
         self._queue_cache: Dict[int, object] = {}
+        self._queue_max_diff: Dict[int, Callable] = {}
         self._tq = None
         self._counts_dev = None
         self.quantizer = None
@@ -630,9 +636,35 @@ class TiledExecutor:
                                                           like=self)
         return self._transposed
 
+    def apply_updates(self, snapshot):
+        """Merge one `EpochSnapshot` delta into this executor's stores
+        in place — no full rebuild (`stats.store_builds` stays put,
+        `stats.delta_merges` counts the epochs).  The merged stores are
+        bitwise-equal to building fresh from `snapshot.graph`, so every
+        aggregate after the merge matches a from-scratch executor
+        exactly; all derived device state (staged queues, transposed
+        views, jitted closures, x-cache) is dropped and re-stages
+        lazily against the new stores.  Returns the `StoreDelta`."""
+        from repro.graphs.updates import (update_packed_store,
+                                          update_tile_store)
+        new_store, delta = update_tile_store(
+            self.store, snapshot.batch, snapshot.graph.num_vertices)
+        if self.packed is not None:
+            self.packed = update_packed_store(self.packed, new_store,
+                                              delta)
+        self.store = new_store
+        self._xcache = OrderedDict()
+        self._transposed = None
+        self._diff_cache = {}
+        self._rel_select = None
+        self._init_queue_state()
+        self.stats.delta_merges += 1
+        return delta
+
     # -- public API ----------------------------------------------------
     def reset_stats(self):
-        self.stats = TiledStats()
+        self.stats = TiledStats(store_builds=self.stats.store_builds,
+                                delta_merges=self.stats.delta_merges)
 
     def effective_chunk(self, dim: int) -> int:
         """Re-fit the chunk for this call's feature dim.  The tile is
@@ -654,8 +686,8 @@ class TiledExecutor:
         return c
 
     # -- chunk-queue streaming (DESIGN.md C11) -------------------------
-    def queue_plan(self, d: int, op: str = "sum",
-                   differentiable: bool = False) -> Optional[QueuePlan]:
+    def queue_plan(self, d: int,
+                   op: str = "sum") -> Optional[QueuePlan]:
         """Can this aggregate run as a device-resident chunk queue?
         Prices the queue itself (`kernels.chunk_queue.queue_bytes`) plus
         the sweep's working set — the resident (N, d) features, the
@@ -663,13 +695,12 @@ class TiledExecutor:
         (slab, d) gather intermediate — against the budget, halving the
         slab (floor 256) until it fits.  Returns None when the callback
         loop must run instead: streaming_mode="callback", no packed
-        store, over budget at the floor slab, or a *differentiable* max
-        that would need more than one slab (the scan's cross-slab
-        maximum-merge splits ties differently from `segment_max`'s
-        gradient convention, so multi-slab max grads would diverge from
-        the dense oracle; the forward-only max has no such constraint).
+        store, or over budget at the floor slab.
         streaming_mode="chunk_queue" raises instead of returning None
-        for the budget/max cases."""
+        for the budget case.  Differentiable max no longer constrains
+        the slab count: multi-slab max routes through
+        `make_queue_max_diff`, whose (max, tie-count) scan carry keeps
+        `segment_max`'s even tie-split convention across slabs."""
         if self.streaming_mode == "callback" or self.packed is None:
             return None
         from repro.kernels.chunk_queue.ops import queue_bytes
@@ -694,12 +725,6 @@ class TiledExecutor:
                         f"chunk queue needs {b}B at the floor slab, "
                         f"budget is {self.budget_bytes}B")
                 return None
-        if op == "max" and differentiable and steps > 1:
-            if self.streaming_mode == "chunk_queue":
-                raise DeviceBudgetExceeded(
-                    "differentiable max needs a single-slab queue "
-                    f"({m} entries) but the budget allows slab={slab}")
-            return None
         return QueuePlan(slab, steps, b)
 
     def _device_queue(self, slab: int):
@@ -769,13 +794,25 @@ class TiledExecutor:
 
     def _queue_traced(self, x, op: str, plan: QueuePlan):
         """The traced formulation `make_streamed_aggregate` routes to
-        when a queue plan exists: plain jax — jit fuses it, plain AD
-        differentiates it, no custom_vjp and no host callbacks."""
-        from repro.kernels.chunk_queue.ops import queue_sweep_xla
+        when a queue plan exists: plain jax for sum/mean and
+        single-slab max — jit fuses it, plain AD differentiates it, no
+        host callbacks.  Multi-slab max swaps in `make_queue_max_diff`
+        (forward bitwise the plain scan, custom backward carrying the
+        cross-slab tie counts) so its gradient keeps `segment_max`'s
+        even tie split."""
+        from repro.kernels.chunk_queue.ops import (make_queue_max_diff,
+                                                   queue_sweep_xla)
         q = self._device_queue(plan.slab)
         base = "sum" if op == "mean" else op
-        y = queue_sweep_xla(q.gsrc, q.gdst, q.vals, q.scales, x,
-                            n=q.n, op=base)
+        if base == "max" and q.steps > 1:
+            fn = self._queue_max_diff.get(plan.slab)
+            if fn is None:
+                fn = make_queue_max_diff(q)
+                self._queue_max_diff[plan.slab] = fn
+            y = fn(x)
+        else:
+            y = queue_sweep_xla(q.gsrc, q.gdst, q.vals, q.scales, x,
+                                n=q.n, op=base)
         if op == "mean":
             y = y / self._counts_col()
         return y
@@ -1454,9 +1491,10 @@ def make_streamed_aggregate(ex: TiledExecutor, op: str) -> Callable:
     callback machinery entirely and runs `ex._queue_traced` — a plain
     traced lax.scan over the prestaged slabs that jit fuses into the
     surrounding layer and plain jax AD differentiates (sum backward is
-    the same gather/scatter scan transposed by AD; max inherits
-    segment_max's tie convention, which is why `queue_plan` insists on a
-    single slab for differentiable max).  The routing happens per call
+    the same gather/scatter scan transposed by AD; multi-slab max
+    routes through `make_queue_max_diff`, whose (max, tie-count) carry
+    keeps segment_max's even tie-split convention across slabs).  The
+    routing happens per call
     at trace time, so one wrapper serves both regimes: a model traced
     under a tight budget streams through callbacks, the same model
     under a roomy budget runs queue-resident with zero host round
@@ -1541,8 +1579,7 @@ def make_streamed_aggregate(ex: TiledExecutor, op: str) -> Callable:
         # trace-time routing: shapes are concrete under jit, so the
         # plan (and thus which formulation lands in the jaxpr) is
         # decided per trace, not per run
-        plan = ex.queue_plan(int(x.shape[1]), base_op,
-                             differentiable=True)
+        plan = ex.queue_plan(int(x.shape[1]), base_op)
         if plan is None:
             return cb_fn(x)
         return ex._queue_traced(x, op, plan)

@@ -1,9 +1,11 @@
-"""Graph substrate: formats, generators, partitioning, degree analysis."""
+"""Graph substrate: formats, generators, partitioning, degree analysis,
+and the dynamic-graph update log (DESIGN.md C14)."""
 from repro.graphs.format import COOGraph, CSRGraph, BlockedAdjacency, coo_to_csr, coo_to_blocked
 from repro.graphs.generate import rmat_graph, dataset_stats, make_dataset
 from repro.graphs.partition import grid_partition, tile_schedule_order
 from repro.graphs.degree import degree_sort_permutation, apply_vertex_permutation
 from repro.graphs.subgraph import Subgraph, SubgraphExtractor, extract_khop
+from repro.graphs.updates import UpdateLog, EpochSnapshot, UpdateBatch
 
 __all__ = [
     "COOGraph", "CSRGraph", "BlockedAdjacency", "coo_to_csr", "coo_to_blocked",
@@ -11,4 +13,5 @@ __all__ = [
     "grid_partition", "tile_schedule_order",
     "degree_sort_permutation", "apply_vertex_permutation",
     "Subgraph", "SubgraphExtractor", "extract_khop",
+    "UpdateLog", "EpochSnapshot", "UpdateBatch",
 ]

@@ -14,9 +14,12 @@ a single traced computation with zero host round-trips:
   `slab` bounds the (slab, d) gather intermediate, so the sweep runs
   under budgets where the segment backend's (E, d) intermediate would
   not fit; with a single slab it degenerates to one fused launch
-  (bitwise `packed_flat_xla`).  Plain jax AD differentiates the scan —
-  the streamed *queue* path needs no `custom_vjp` at all, and max
-  gradients inherit `segment_max`'s exact tie convention.
+  (bitwise `packed_flat_xla`).  Plain jax AD differentiates the scan
+  for sum/mean (and single-slab max); multi-slab max differentiates
+  through `make_queue_max_diff`, whose `lax.scan` carries the
+  `(max, tie count)` pair across slabs so the cotangent splits evenly
+  among ALL tied winners — `segment_max`'s convention — instead of the
+  50/50-per-merge split a plain `jnp.maximum` scan would produce.
 
 * **Mosaic path (TPU)**: `chunk_queue.chunk_queue_spmm`, the
   persistent per-interval walker with explicit double-buffered DMA;
@@ -170,6 +173,96 @@ def queue_sweep_xla(gsrc, gdst, vals, scales, x, *, n: int,
     if op == "max":
         y = jnp.where(jnp.isneginf(y), 0.0, y)
     return y[:n]
+
+
+def make_queue_max_diff(queue: ChunkQueue):
+    """Differentiable multi-slab max sweep over a staged queue.
+
+    The non-differentiable scan in `queue_sweep_xla` merges slabs with
+    `jnp.maximum`, whose gradient splits a cross-slab tie 50/50 per
+    merge — two winners in slab 1 and one in slab 2 would receive
+    g/4, g/4, g/2 instead of `segment_max`'s even g/3 each.  This
+    custom_vjp keeps the forward bitwise identical (the value carry is
+    the same `maximum` chain) while ALSO carrying the per-row tie count
+    across slabs, the same `(max, count)` merge the streamed callback
+    VJP uses (`core/tiled.py::_merge_max_count`): a strictly better
+    slab replaces the count, an exact finite tie adds to it.  The
+    backward re-walks the slabs, recomputes each edge product with the
+    forward's exact operands, and scatters g/count to every entry whose
+    product equals the global max — `segment_max`'s even-split
+    convention, now independent of how ties distribute over slabs.
+
+    Gradients flow to x only; the queue is a constant of the graph.
+    """
+    n = queue.n
+    rows = n + 1
+    gsrc, gdst, vals, scales = (queue.gsrc, queue.gdst, queue.vals,
+                                queue.scales)
+
+    def _fwd_scan(x):
+        d = x.shape[1]
+        init = (jnp.full((rows, d), -jnp.inf, jnp.float32),
+                jnp.zeros((rows, d), jnp.float32))
+
+        def body(carry, sl):
+            acc_v, acc_c = carry
+            src, dst, v, s = sl
+            vv = _slab_vals(v, s)
+            gathered = jnp.take(x, src, axis=0)
+            scaled = jnp.where((vv != 0.0)[:, None],
+                               vv[:, None] * gathered, -jnp.inf)
+            m = jax.ops.segment_max(scaled, dst, num_segments=rows)
+            c = jax.ops.segment_sum(
+                jnp.where((scaled == m[dst]) & (vv != 0.0)[:, None],
+                          1.0, 0.0), dst, num_segments=rows)
+            better = m > acc_v
+            ties = (m == acc_v) & jnp.isfinite(m)
+            acc_v = jnp.maximum(acc_v, m)
+            acc_c = jnp.where(better, c,
+                              acc_c + jnp.where(ties, c, 0.0))
+            return (acc_v, acc_c), None
+
+        (yv, yc), _ = jax.lax.scan(body, init,
+                                   (gsrc, gdst, vals, scales))
+        return yv, yc
+
+    @jax.custom_vjp
+    def sweep(x):
+        yv, _ = _fwd_scan(x)
+        return jnp.where(jnp.isneginf(yv), 0.0, yv)[:n]
+
+    def sweep_fwd(x):
+        yv, yc = _fwd_scan(x)
+        y = jnp.where(jnp.isneginf(yv), 0.0, yv)[:n]
+        # residuals keep the RAW running max (with -inf for uncovered
+        # rows): the backward's bitwise product match must compare
+        # against the true max, not the 0.0 the output substitutes
+        return y, (x, yv, yc)
+
+    def sweep_bwd(res, g):
+        x, yv, yc = res
+        gn = (jnp.zeros((rows, g.shape[1]), jnp.float32).at[:n].set(g)
+              / jnp.maximum(yc, 1.0))
+
+        def body(gx, sl):
+            src, dst, v, s = sl
+            vv = _slab_vals(v, s)
+            prod = vv[:, None] * jnp.take(x, src, axis=0)
+            match = ((vv != 0.0)[:, None]
+                     & (prod == jnp.take(yv, dst, axis=0)))
+            contrib = jnp.where(match,
+                                vv[:, None] * jnp.take(gn, dst, axis=0),
+                                0.0)
+            gx = gx + jax.ops.segment_sum(contrib, src,
+                                          num_segments=x.shape[0])
+            return gx, None
+
+        gx, _ = jax.lax.scan(body, jnp.zeros_like(x),
+                             (gsrc, gdst, vals, scales))
+        return (gx,)
+
+    sweep.defvjp(sweep_fwd, sweep_bwd)
+    return sweep
 
 
 def chunk_queue_aggregate(queue: ChunkQueue, x, *, op: str = "sum",

@@ -38,9 +38,8 @@ class DegreeAwareCache:
                  reserved_frac: float = 0.5):
         if capacity <= 0:
             raise ValueError("capacity must be positive")
-        n_res = int(capacity * reserved_frac)
-        if degrees is None:
-            n_res = 0
+        self._n_res = int(capacity * reserved_frac)
+        n_res = self._n_res if degrees is not None else 0
         self.capacity = capacity
         self.lru_capacity = capacity - n_res
         order = (np.argsort(-np.asarray(degrees), kind="stable")
@@ -49,7 +48,7 @@ class DegreeAwareCache:
         self._pinned: Dict[int, np.ndarray] = {}
         self._lru: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self.stats = {"hits": 0, "misses": 0, "evictions": 0,
-                      "pinned_hits": 0}
+                      "pinned_hits": 0, "invalidations": 0, "repins": 0}
         self._dim: Optional[int] = None
 
     def __len__(self) -> int:
@@ -114,3 +113,59 @@ class DegreeAwareCache:
         self._pinned.clear()
         self._lru.clear()
         self._dim = None
+
+    # -- dynamic-graph maintenance (DESIGN.md C14) ------------------------
+    def invalidate(self, ids) -> int:
+        """Evict the given vertices' rows from *both* tiers (a graph
+        update changed their L-hop in-neighbourhood, so the cached
+        embeddings are stale).  Pinned rows are dropped but the ids
+        stay pinned — the next insert re-fills the reserved line.
+        Returns the number of rows actually evicted."""
+        dropped = 0
+        for v in np.asarray(ids, np.int64).tolist():
+            if self._pinned.pop(v, None) is not None:
+                dropped += 1
+            if self._lru.pop(v, None) is not None:
+                dropped += 1
+        self.stats["invalidations"] += dropped
+        return dropped
+
+    def pin_drift(self, degrees: np.ndarray) -> float:
+        """Fraction of the current pinned set that would NOT be pinned
+        under the given degree profile — how far the hub set has
+        drifted since the pins were chosen (0.0 = unchanged)."""
+        if not self.pinned_ids:
+            return 0.0
+        order = np.argsort(-np.asarray(degrees), kind="stable")
+        fresh = set(int(v) for v in order[:len(self.pinned_ids)])
+        stale = len(self.pinned_ids - fresh)
+        return stale / len(self.pinned_ids)
+
+    def repin(self, degrees: np.ndarray) -> int:
+        """Recompute the reserved hub set from a fresh degree profile
+        (the degree-tracked analogue of the paper's offline static
+        analysis).  Rows cached under pins that lost their status move
+        to the LRU tier; newly pinned ids keep any LRU row they already
+        have.  Returns the number of pin slots that changed hands."""
+        order = np.argsort(-np.asarray(degrees), kind="stable")
+        n_res = min(self._n_res, order.shape[0])
+        fresh = frozenset(int(v) for v in order[:n_res])
+        changed = len(self.pinned_ids ^ fresh)
+        # demote rows whose vertex lost pinned status
+        for v in list(self._pinned):
+            if v not in fresh:
+                row = self._pinned.pop(v)
+                if self.lru_capacity > 0:
+                    self._lru[v] = row
+                    self._lru.move_to_end(v)
+                    if len(self._lru) > self.lru_capacity:
+                        self._lru.popitem(last=False)
+                        self.stats["evictions"] += 1
+        # promote LRU rows that became pinned
+        for v in fresh:
+            if v in self._lru:
+                self._pinned[v] = self._lru.pop(v)
+        self.pinned_ids = fresh
+        self.lru_capacity = self.capacity - n_res
+        self.stats["repins"] += 1
+        return changed

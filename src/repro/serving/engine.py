@@ -39,7 +39,6 @@ drop to the tiled executor.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import partial
 from typing import Any, Dict, List, Optional
 
@@ -54,24 +53,18 @@ from repro.graphs.subgraph import SubgraphExtractor
 from repro.serving.batcher import GNNBatcher, Request, Response
 from repro.serving.cache import DegreeAwareCache
 
-# sentinel for the deprecated mirror fields below: distinguishes "caller
-# never passed this" from an explicit None
-_UNSET: Any = object()
-
-
 @dataclasses.dataclass
 class ServingConfig:
     """Serving-loop knobs, with the *execution* knobs unified under an
     embedded `EnGNConfig` (DESIGN.md C12).
 
-    Historically the budget / ring / streaming / quantisation switches
-    were mirrored here under serving-specific names; they now live on
+    The budget / ring / streaming / quantisation switches live on
     ``engn`` (`device_budget_bytes`, `ring_shards`, `streaming_mode`,
     `tile_value_dtype`) so serving and training read one config type.
-    The old field names still work for one release: passing them warns
-    `DeprecationWarning` and writes through to ``engn``; after
-    `__post_init__` they are plain resolved values, so existing readers
-    keep working either way.
+    The serving-specific mirror names that bridged the move for one
+    release (`device_budget_bytes`, `ring_shards`,
+    `tiled_streaming_mode`, `tiled_value_dtype`) are gone — passing
+    them raises `TypeError` like any unknown dataclass field.
     """
 
     batch_size: int = 128
@@ -102,33 +95,39 @@ class ServingConfig:
     # startup from the DAVC degree profile (engine.warm_fill)
     warm_cache: bool = False
     warm_cache_max: int = 512         # cap on hub vertices warm-filled
-    # -- deprecated mirrors (one release; set engn.* instead) -------------
-    device_budget_bytes: Any = _UNSET   # -> engn.device_budget_bytes
-    ring_shards: Any = _UNSET           # -> engn.ring_shards
-    tiled_streaming_mode: Any = _UNSET  # -> engn.streaming_mode
-    tiled_value_dtype: Any = _UNSET     # -> engn.tile_value_dtype
+    # -- dynamic graphs (DESIGN.md C14) -----------------------------------
+    # after `apply_updates`, recompute the cache's pinned hub set when
+    # more than this fraction of it lost top-degree status (and re-run
+    # the warm fill if warm_cache is set); <=0 repins on every epoch
+    hub_drift_threshold: float = 0.25
 
     def __post_init__(self):
         if self.engn is None:
             # dims are per-model and unused at the config-carrier level;
             # the engine reads them from its layer stack
             self.engn = EnGNConfig(in_dim=0, out_dim=0, backend="segment")
-        mirrors = [
-            ("device_budget_bytes", "device_budget_bytes"),
-            ("ring_shards", "ring_shards"),
-            ("tiled_streaming_mode", "streaming_mode"),
-            ("tiled_value_dtype", "tile_value_dtype"),
-        ]
-        for old, new in mirrors:
-            v = getattr(self, old)
-            if v is not _UNSET:
-                warnings.warn(
-                    f"ServingConfig.{old} is deprecated; set "
-                    f"ServingConfig(engn=EnGNConfig(..., {new}=...)) "
-                    f"instead", DeprecationWarning, stacklevel=3)
-                setattr(self.engn, new, v)
-            # resolve the mirror so legacy readers see the live value
-            setattr(self, old, getattr(self.engn, new))
+
+
+def _affected_vertices(old_graph: COOGraph, new_graph: COOGraph,
+                       touched_dst: np.ndarray, num_hops: int
+                       ) -> np.ndarray:
+    """Vertices whose L-hop in-neighbourhood a graph delta reached: the
+    forward closure of the changed edges' destinations, up to
+    (num_hops - 1) hops, over the union of old and new edges (an edge
+    present on either side can carry staleness).  O(hops * E) boolean
+    masking — no adjacency index is built."""
+    n = max(old_graph.num_vertices, new_graph.num_vertices)
+    affected = np.zeros(n, bool)
+    affected[touched_dst] = True
+    srcs = np.concatenate([old_graph.src, new_graph.src])
+    dsts = np.concatenate([old_graph.dst, new_graph.dst])
+    for _ in range(max(num_hops - 1, 0)):
+        grown = affected.copy()
+        grown[dsts[affected[srcs]]] = True
+        if np.array_equal(grown, affected):
+            break
+        affected = grown
+    return np.nonzero(affected)[0].astype(np.int32)
 
 
 def _next_pow2(n: int) -> int:
@@ -242,6 +241,58 @@ class GNNServingEngine:
             self.cache.insert(chunk, y)
         self.stats["warm_filled"] += int(hubs.size)
         return int(hubs.size)
+
+    def apply_updates(self, snapshot, x_new: Optional[np.ndarray] = None
+                      ) -> Dict[str, float]:
+        """Swap in one `EpochSnapshot` of graph updates (DESIGN.md C14).
+
+        The serving graph and extractor move to the epoch graph; the
+        result cache is surgically invalidated rather than cleared: a
+        cached embedding of vertex v is stale iff a changed edge's
+        destination lies within v's (num_hops - 1)-hop *forward*
+        closure — those rows (and only those) are evicted from both
+        tiers.  When the degree profile has drifted past
+        `config.hub_drift_threshold`, the pinned hub set is recomputed
+        and, under `warm_cache`, refreshed via `warm_fill`.
+
+        `x_new` replaces the feature matrix (required when vertices
+        were added and features exist for them); otherwise new vertices
+        get zero feature rows.
+        """
+        old_graph = self.graph
+        g = snapshot.graph
+        if x_new is not None:
+            x_new = np.asarray(x_new)
+            if x_new.shape[0] != g.num_vertices:
+                raise ValueError(
+                    f"x_new has {x_new.shape[0]} rows, epoch graph has "
+                    f"{g.num_vertices} vertices")
+            self.x = x_new
+        elif g.num_vertices > self.x.shape[0]:
+            pad = np.zeros((g.num_vertices - self.x.shape[0],
+                            self.x.shape[1]), self.x.dtype)
+            self.x = np.concatenate([self.x, pad], axis=0)
+        self.graph = g
+        self.extractor = SubgraphExtractor(g)
+        out = {"affected": 0, "invalidated": 0, "pin_drift": 0.0,
+               "repinned": 0, "warm_refilled": 0}
+        if self.cache is not None:
+            affected = _affected_vertices(old_graph, g,
+                                          snapshot.touched_dst,
+                                          self.num_hops)
+            out["affected"] = int(affected.size)
+            out["invalidated"] = self.cache.invalidate(affected)
+            deg = g.degrees()
+            drift = self.cache.pin_drift(deg)
+            out["pin_drift"] = float(drift)
+            if drift > self.config.hub_drift_threshold:
+                out["repinned"] = self.cache.repin(deg)
+                if self.config.warm_cache:
+                    out["warm_refilled"] = self.warm_fill(
+                        self.config.warm_cache_max)
+        self.stats["updates_applied"] = (
+            self.stats.get("updates_applied", 0) + 1)
+        return out
 
     def reset_telemetry(self):
         """Zero all counters (cache *contents* and compiled programs are

@@ -256,6 +256,15 @@ class ServingPipeline:
                 responses.extend(self._complete_head())
         return responses
 
+    def apply_updates(self, snapshot, x_new=None):
+        """Apply one epoch of graph updates through the pipeline:
+        drain everything in flight first (in-flight batches were
+        extracted against the old graph; completing them before the
+        swap keeps every response consistent with the graph it was
+        admitted under), then delegate to the engine."""
+        self.drain()
+        return self.engine.apply_updates(snapshot, x_new=x_new)
+
     # -- telemetry / lifecycle ---------------------------------------------
     def reset_telemetry(self):
         for k in self.stats:

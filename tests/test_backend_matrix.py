@@ -112,7 +112,7 @@ def _run(backend, fmt, op, g, x):
                      ring_shards=(RING_SHARDS if backend == "ring"
                                   else None))
     gd = prepare_graph(g, cfg)
-    meta = gd.get("blocks_meta") or gd.get("ring_meta")
+    meta = gd.meta
     assert meta["tile_format"] == fmt, (backend, fmt, meta["tile_format"])
     return np.asarray(EnGNLayer(cfg)._aggregate(gd, jnp.asarray(x)))
 
@@ -286,8 +286,7 @@ def test_model_backend_matrix_matches_dense_oracle(model, backend, fmt,
     layer = _model_layer(model, backend, fmt)
     params = _model_params(model)
     gd = prepare_graph(g, layer.cfg)
-    meta = (gd.get("blocks_meta") or gd.get("ring_meta")
-            or gd.get("tiled_meta"))
+    meta = gd.meta
     assert meta["tile_format"] == fmt, (backend, fmt, meta["tile_format"])
     got = np.asarray(layer.apply(params, gd, jnp.asarray(x)))
     want = _ORACLES[model](g, x, params)

@@ -108,7 +108,7 @@ def test_traced_queue_grads_match_segment_oracle(op):
     g = _int_graph(120, 700, seed=3)
     x = _int_features(120, 8, seed=3)
     ex = _packed_ex(g)
-    assert ex.queue_plan(x.shape[1], op, differentiable=True) is not None
+    assert ex.queue_plan(x.shape[1], op) is not None
     fn = make_streamed_aggregate(ex, op)
     w = np.asarray(
         np.random.default_rng(4).integers(1, 3, (120, 8)), np.float32)
@@ -142,21 +142,105 @@ def test_traced_queue_grads_match_segment_oracle(op):
     assert ex.stats.steps == 0 and ex.stats.bwd_steps == 0
 
 
-def test_differentiable_max_requires_single_slab():
-    g = _int_graph(256, 2000, seed=5)
+def _multi_slab_ex(n=256, e=2000, d=8, seed=5):
+    """Executor whose budget forces the queue below one slab (steps>1),
+    sized exactly like queue_plan's own pricing so the plan lands at
+    slab=512."""
+    g = _int_graph(n, e, seed=seed)
     ex = _packed_ex(g)
-    m = ex.packed.nnz
-    # budget sized so the slab halves below m -> steps > 1
-    d = 8
-    n = g.num_vertices
     work = 4 * d * (512 + 2 * (n + 1)) + 4 * n * d
-    ex.budget_bytes = queue_bytes(m, 512) + work + 64
+    ex.budget_bytes = queue_bytes(ex.packed.nnz, 512) + work + 64
+    return g, ex
+
+
+def test_differentiable_max_spans_slabs():
+    """Regression for the removed single-slab fence: queue_plan used to
+    return None for a differentiable multi-slab max because the scan's
+    cross-slab `maximum` merge split ties differently from segment_max.
+    The (max, tie-count) carry fixed that, so the plan must now land
+    (steps > 1) and the traced route must run queue-resident."""
+    d = 8
+    g, ex = _multi_slab_ex(d=d)
     plan = ex.queue_plan(d, "max")
     assert plan is not None and plan.steps > 1
-    # forward-only max may span slabs; differentiable max may not (the
-    # cross-slab maximum merge splits ties differently from segment_max)
-    assert ex.queue_plan(d, "max", differentiable=True) is None
-    assert ex.queue_plan(d, "sum", differentiable=True) is not None
+    assert ex.queue_plan(d, "sum") is not None
+    x = _int_features(g.num_vertices, d, seed=5)
+    fn = make_streamed_aggregate(ex, "max")
+    np.testing.assert_array_equal(np.asarray(jax.jit(fn)(jnp.asarray(x))),
+                                  _segment_ref(g, x, "max"))
+    # queue-resident, not the callback custom_vjp
+    assert ex.stats.queue_builds == 1 and ex.stats.steps == 0
+
+
+def test_multi_slab_max_grads_match_segment_with_cross_slab_ties():
+    """The fence-removal correctness case, crafted so the comparison
+    is *bitwise*: every dst row has exactly 4 tied winners, one per
+    source block, so the packed queue scatters them across 4 different
+    tiles (and thus different slabs) — exactly where the plain
+    `jnp.maximum` scan gradient would split 50/50 per merge (g/6 +
+    g/2 for a 3+1 split) instead of segment_max's even g/4.  Tie
+    counts are powers of two and all values dyadic, so g/count, the
+    v*gn products and every partial sum are exact in fp32 —
+    summation association cannot blur the comparison."""
+    n, d, t = 256, 8, 64
+    # dst r <- src (r + 64k) % n for k in 0..3: one in-edge per source
+    # block, 4-way tie per row once the features are column-constant
+    dst = np.repeat(np.arange(n, dtype=np.int32), 4)
+    src = ((dst + t * np.tile(np.arange(4, dtype=np.int32), n)) % n)
+    g = COOGraph(n, src.astype(np.int32), dst,
+                 np.ones(src.size, np.float32))
+    ex = _packed_ex(g, tile=t)
+    m = ex.packed.nnz
+    assert m == 4 * n
+    work = 4 * d * (256 + 2 * (n + 1)) + 4 * n * d
+    ex.budget_bytes = queue_bytes(m, 256) + work + 64
+    plan = ex.queue_plan(d, "max")
+    assert plan is not None and plan.steps > 1
+    rng = np.random.default_rng(7)
+    # column-constant pow2 features: all 4 in-edge products of a row tie
+    x = np.broadcast_to(
+        (2.0 ** rng.integers(0, 3, (1, d))).astype(np.float32),
+        (n, d)).copy()
+    w = (2.0 ** rng.integers(0, 2, (n, d))).astype(np.float32)
+    fn = make_streamed_aggregate(ex, "max")
+
+    def seg(xx):
+        ev = xx[jnp.asarray(g.src)] * jnp.asarray(g.val)[:, None]
+        return segment_aggregate(ev, jnp.asarray(g.dst),
+                                 g.num_vertices, "max")
+
+    xj = jnp.asarray(x)
+    np.testing.assert_array_equal(np.asarray(jax.jit(fn)(xj)),
+                                  np.asarray(jax.jit(seg)(xj)))
+    gq = jax.jit(jax.grad(lambda xx: jnp.sum(fn(xx) * w)))(xj)
+    gs = jax.jit(jax.grad(lambda xx: jnp.sum(seg(xx) * w)))(xj)
+    np.testing.assert_array_equal(np.asarray(gq), np.asarray(gs))
+    # the custom bwd re-walked the slabs in-trace: no callback streaming
+    assert ex.stats.steps == 0 and ex.stats.bwd_steps == 0
+
+
+def test_multi_slab_max_grads_close_on_random_integer_data():
+    """Randomized twin of the crafted case: rmat graph, integer
+    weights/features.  The even-split convention matches the oracle
+    exactly; the residual tolerance only covers summation association
+    (the oracle scatters all edges in one segment_sum, the slab scan
+    adds per-slab partials)."""
+    d = 8
+    g, ex = _multi_slab_ex(d=d)
+    assert ex.queue_plan(d, "max").steps > 1
+    x = _int_features(g.num_vertices, d, seed=11)
+    fn = make_streamed_aggregate(ex, "max")
+
+    def seg(xx):
+        ev = xx[jnp.asarray(g.src)] * jnp.asarray(g.val)[:, None]
+        return segment_aggregate(ev, jnp.asarray(g.dst),
+                                 g.num_vertices, "max")
+
+    xj = jnp.asarray(x)
+    gq = jax.jit(jax.grad(lambda xx: jnp.sum(fn(xx))))(xj)
+    gs = jax.jit(jax.grad(lambda xx: jnp.sum(seg(xx))))(xj)
+    np.testing.assert_allclose(np.asarray(gq), np.asarray(gs),
+                               rtol=2e-5, atol=2e-6)
 
 
 # ------------------------------------------------- budget/mode gates

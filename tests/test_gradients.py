@@ -79,14 +79,14 @@ def test_rer_spmm_xla_grad_matches_fd():
     cfg = EnGNConfig(in_dim=5, out_dim=5, backend="blocked", tile=8,
                      tile_format="dense")
     gd = prepare_graph(g, cfg)
-    q, pad = gd["blocks_meta"]["q"], gd["blocks_meta"]["padded"]
+    q, pad = gd.meta["q"], gd.meta["padded"]
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.uniform(0.5, 1.5, (pad, 5)).astype(np.float32))
     coef = jnp.asarray(rng.uniform(-1, 1, (pad, 5)).astype(np.float32))
     for op in ("sum", "max"):
         def loss(xx, _op=op):
-            y = blocked_spmm_xla(gd["blocks"], gd["block_row"],
-                                 gd["block_col"], xx, q=q, op=_op)
+            y = blocked_spmm_xla(gd.carrier["blocks"], gd.carrier["block_row"],
+                                 gd.carrier["block_col"], xx, q=q, op=_op)
             return jnp.sum(y * coef)
         _check_fd(loss, x, seed=2)
 
@@ -205,8 +205,8 @@ def test_streamed_vjp_matches_blocked_grad():
                            backend="blocked", tile=32, training=True,
                            device_budget_bytes=budget)
         gd_t = prepare_graph(g, cfg_t)
-        assert gd_t["backend"] == "tiled", op
-        agg = make_streamed_aggregate(gd_t["tiled_exec"], op)
+        assert gd_t.backend == "tiled", op
+        agg = make_streamed_aggregate(gd_t.carrier["tiled_exec"], op)
 
         def loss_t(xx):
             return jnp.sum(agg(xx) * coef)
@@ -309,8 +309,8 @@ def test_streamed_vjp_respects_budget():
                      backend="segment", device_budget_bytes=120_000,
                      training=True)
     gd = prepare_graph(g, cfg)
-    assert gd["backend"] == "tiled"
-    agg = make_streamed_aggregate(gd["tiled_exec"], "max")
+    assert gd.backend == "tiled"
+    agg = make_streamed_aggregate(gd.carrier["tiled_exec"], "max")
     gx = jax.grad(lambda xx: jnp.sum(agg(xx)))(x)   # must not raise
     assert np.isfinite(np.asarray(gx)).all()
 
@@ -358,7 +358,7 @@ def test_streamed_typed_rgcn_grads_fd():
     assert dense_footprint_bytes(n, g.num_edges, f, h,
                                  "segment") > budget
     gd = prepare_graph(g, til.cfg)
-    assert gd["backend"] == "tiled"
+    assert gd.backend == "tiled"
     shapes = til.init(jax.random.key(2))
     params = {
         "w0": _uniform(shapes["w0"].shape, seed=12, lo=0.1, hi=1.0),
@@ -422,7 +422,7 @@ def test_streamed_gated_grads_fd():
     assert dense_footprint_bytes(n, g.num_edges, f, h,
                                  "segment") > budget
     gd = prepare_graph(g, til.cfg)
-    assert gd["backend"] == "tiled"
+    assert gd.backend == "tiled"
     params = til.init(jax.random.key(6))
 
     for key in ("w_h", "w_c"):
@@ -455,7 +455,7 @@ def test_ring_staged_grads_fd(model, fmt):
     ring.cfg.ring_shards = shards
     ring.cfg.tile_format = fmt
     gd = prepare_graph(g, ring.cfg)
-    assert gd["ring_meta"]["tile_format"] == fmt
+    assert gd.meta["tile_format"] == fmt
     params = ring.init(jax.random.key(9))
     wkey = "wr" if model == "rgcn" else "w_h"
 
@@ -485,8 +485,8 @@ def test_gnn_training_trajectory_tiled_matches_blocked():
     step_t, st_t, data_t, gd_t, _ = build_gnn(backend="blocked",
                                               device_budget_bytes=budget,
                                               **kw)
-    assert gd_b["backend"] == "blocked"
-    assert gd_t["backend"] == "tiled"
+    assert gd_b.backend == "blocked"
+    assert gd_t.backend == "tiled"
     traj = {}
     for tag, step, state, data in (("blocked", step_b, st_b, data_b),
                                    ("tiled", step_t, st_t, data_t)):
@@ -498,7 +498,7 @@ def test_gnn_training_trajectory_tiled_matches_blocked():
         traj[tag] = losses
     np.testing.assert_allclose(traj["tiled"], traj["blocked"],
                                rtol=0, atol=1e-4)
-    st = gd_t["tiled_exec"].stats
+    st = gd_t.carrier["tiled_exec"].stats
     # callback regime streams transposed tiles backward; the chunk-queue
     # regime (DESIGN.md C11) differentiates the device-resident sweep
     # instead, so no backward tiles move on it

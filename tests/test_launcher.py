@@ -49,7 +49,7 @@ def test_launcher_gnn_mode_trains_on_ring_backend():
     trajectory as the segment reference."""
     seg_losses, _ = _gnn_losses("segment")
     ring_losses, gd = _gnn_losses("ring", ring_shards=1)
-    assert gd.get("backend") == "ring"
+    assert gd.backend == "ring"
     assert all(np.isfinite(ring_losses))
     assert ring_losses[-1] < ring_losses[0]
     np.testing.assert_allclose(ring_losses, seg_losses,
@@ -65,9 +65,9 @@ def test_launcher_gnn_mode_budget_spill_trains_streamed():
     seg_losses, _ = _gnn_losses("segment", steps=3)
     spill_losses, gd = _gnn_losses("ring", steps=3, ring_shards=1,
                                    device_budget_bytes=50_000)
-    assert gd.get("backend") == "tiled"
-    assert gd["tiled_meta"]["trainable"] is True
+    assert gd.backend == "tiled"
+    assert gd.meta["trainable"] is True
     assert all(np.isfinite(spill_losses))
     np.testing.assert_allclose(spill_losses, seg_losses,
                                rtol=1e-3, atol=1e-4)
-    assert gd["tiled_exec"].stats.bwd_tiles > 0
+    assert gd.carrier["tiled_exec"].stats.bwd_tiles > 0

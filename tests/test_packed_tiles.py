@@ -339,25 +339,25 @@ def test_packed_blocked_budget_rechecks_built_plan():
     spill = EnGNConfig(in_dim=8, out_dim=8, backend="blocked", tile=32,
                        tile_format="packed", device_budget_bytes=10_000)
     gd = prepare_graph(g, spill)
-    assert gd["backend"] == "tiled"
+    assert gd.backend == "tiled"
     fits = EnGNConfig(in_dim=8, out_dim=8, backend="blocked", tile=32,
                       tile_format="packed",
                       device_budget_bytes=50_000_000)
     gd = prepare_graph(g, fits)
-    assert gd["blocks_meta"]["tile_format"] == "packed"
+    assert gd.meta["tile_format"] == "packed"
     # exactly one device representation is uploaded (flat off-TPU)
-    assert ("packed_flat" in gd) != ("packed_groups" in gd)
+    assert ("packed_flat" in gd.carrier) != ("packed_groups" in gd.carrier)
 
 
 def test_prepared_plans_record_format_choice():
     g = _int_graph(100, 600, seed=5)
     cfg = EnGNConfig(in_dim=6, out_dim=6, backend="tiled", tile=16)
     gd = prepare_graph(g, cfg)
-    meta = gd["tiled_meta"]
+    meta = gd.meta
     assert meta["tile_format"] in ("packed", "dense")
     assert meta["format_choice"].reason in ("cost-model", "forced")
     rcfg = EnGNConfig(in_dim=6, out_dim=6, backend="ring", tile=16,
                       ring_shards=1)
     rgd = prepare_graph(g, rcfg)
-    assert rgd["ring_meta"]["tile_format"] == "packed"
-    assert rgd["ring_meta"]["stats"].tile_format == "packed"
+    assert rgd.meta["tile_format"] == "packed"
+    assert rgd.meta["stats"].tile_format == "packed"

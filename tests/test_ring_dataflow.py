@@ -133,7 +133,7 @@ def test_prepare_graph_ring_backend_single_shard():
     ring_layer = make_gnn("gcn", 8, 4, backend="ring")
     ring_layer.cfg.ring_shards = 1
     gd = prepare_graph(g, ring_layer.cfg)
-    assert gd["ring_meta"]["shards"] == 1
+    assert gd.meta["shards"] == 1
     y = np.asarray(ring_layer.apply(params, gd, x))
     np.testing.assert_allclose(y, ref, rtol=1e-4, atol=1e-5)
     # and under jit, as the serving/example paths run it
@@ -152,7 +152,7 @@ def test_prepare_graph_supports_all_declared_backends():
     for backend in ("segment", "blocked", "tiled", "fused", "ring"):
         cfg = EnGNConfig(in_dim=8, out_dim=4, backend=backend, tile=16)
         gd = prepare_graph(g, cfg)
-        assert gd["n"] == g.num_vertices
+        assert gd.n == g.num_vertices
 
 
 # ----------------------------------------------------------------------
@@ -313,12 +313,12 @@ def test_ring_tiled_per_shard_budget_spills_and_raises():
     spill = EnGNConfig(in_dim=16, out_dim=8, backend="ring", tile=16,
                        ring_shards=1, device_budget_bytes=10_000)
     gd = prepare_graph(g, spill)
-    assert gd["backend"] == "tiled"
+    assert gd.backend == "tiled"
     fits = EnGNConfig(in_dim=16, out_dim=8, backend="ring", tile=16,
                       ring_shards=1, device_budget_bytes=50_000_000)
     gd = prepare_graph(g, fits)
-    assert gd["backend"] == "ring"
-    assert gd["ring_meta"]["device_bytes"] <= 50_000_000
+    assert gd.backend == "ring"
+    assert gd.meta["device_bytes"] <= 50_000_000
 
 
 def test_make_ring_aggregate_rejects_non_multiple_with_clear_message():

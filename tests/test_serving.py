@@ -316,6 +316,7 @@ def test_engine_ring_gate_serves_oversized_batches_on_the_mesh():
     from repro.core.models import make_gnn_stack, init_stack
     from repro.graphs.format import COOGraph
     from repro.graphs.generate import random_features
+    from repro.core.engn import EnGNConfig
     from repro.serving.engine import GNNServingEngine, ServingConfig
 
     # dense-ish graph: blocked ring tiles are efficient, so the ring
@@ -338,8 +339,10 @@ def test_engine_ring_gate_serves_oversized_batches_on_the_mesh():
 
     eng = GNNServingEngine(
         g, x, layers, params,
-        ServingConfig(batch_size=8, device_budget_bytes=400_000,
-                      ring_shards=1, ring_tile=32))
+        ServingConfig(batch_size=8, ring_tile=32,
+                      engn=EnGNConfig(in_dim=0, out_dim=0,
+                                      device_budget_bytes=400_000,
+                                      ring_shards=1)))
     for i, ids in enumerate(reqs):
         eng.submit(i, ids)
     got = {r.rid: r.outputs for r in eng.drain()}
@@ -353,8 +356,10 @@ def test_engine_ring_gate_serves_oversized_batches_on_the_mesh():
     # batch to the streamed tiled executor instead
     tiny = GNNServingEngine(
         g, x, layers, params,
-        ServingConfig(batch_size=8, device_budget_bytes=50_000,
-                      ring_shards=1, ring_tile=32, tiled_tile=32))
+        ServingConfig(batch_size=8, ring_tile=32, tiled_tile=32,
+                      engn=EnGNConfig(in_dim=0, out_dim=0,
+                                      device_budget_bytes=50_000,
+                                      ring_shards=1)))
     for i, ids in enumerate(reqs):
         tiny.submit(i, ids)
     got2 = {r.rid: r.outputs for r in tiny.drain()}

@@ -4,7 +4,6 @@ equivalence, replicated engines, the workload generator, cache
 warm-fill, the ServingConfig/EnGNConfig unification shim, and the typed
 `PreparedPlan` returned by every prepare_* entry point."""
 import time
-import warnings
 
 import numpy as np
 import pytest
@@ -303,7 +302,7 @@ def test_warm_fill_matches_cold_inference():
                                rtol=2e-5, atol=2e-5)
 
 
-# ------------------------------------------- config unification (shim)
+# ------------------------------------- config unification (shim removed)
 def test_serving_config_embeds_engn_config():
     from repro.core.engn import EnGNConfig
     cfg = ServingConfig(engn=EnGNConfig(in_dim=0, out_dim=0,
@@ -311,25 +310,26 @@ def test_serving_config_embeds_engn_config():
                                         ring_shards=2,
                                         streaming_mode="callback",
                                         tile_value_dtype="int8"))
-    # resolved mirrors read through to the embedded config
-    assert cfg.device_budget_bytes == 123
-    assert cfg.ring_shards == 2
-    assert cfg.tiled_streaming_mode == "callback"
-    assert cfg.tiled_value_dtype == "int8"
-
-
-def test_serving_config_deprecated_fields_warn_and_write_through():
-    with pytest.warns(DeprecationWarning, match="device_budget_bytes"):
-        cfg = ServingConfig(device_budget_bytes=77_000)
-    assert cfg.engn.device_budget_bytes == 77_000
-    assert cfg.device_budget_bytes == 77_000
-    with pytest.warns(DeprecationWarning, match="tiled_streaming_mode"):
-        cfg = ServingConfig(tiled_streaming_mode="callback")
+    # execution knobs live on the embedded config, nowhere else
+    assert cfg.engn.device_budget_bytes == 123
+    assert cfg.engn.ring_shards == 2
     assert cfg.engn.streaming_mode == "callback"
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")      # no kwargs -> no warning
-        cfg = ServingConfig()
-    assert cfg.device_budget_bytes is None
+    assert cfg.engn.tile_value_dtype == "int8"
+
+
+def test_serving_config_deprecated_mirrors_are_gone():
+    """The one-release write-through shim was removed: the old mirror
+    names are unknown fields (TypeError), not silent no-ops, and the
+    resolved-mirror attributes no longer exist on instances."""
+    for kw in ("device_budget_bytes", "ring_shards",
+               "tiled_streaming_mode", "tiled_value_dtype"):
+        with pytest.raises(TypeError):
+            ServingConfig(**{kw: 1})
+    cfg = ServingConfig()
+    for name in ("device_budget_bytes", "ring_shards",
+                 "tiled_streaming_mode", "tiled_value_dtype"):
+        assert not hasattr(cfg, name)
+    assert cfg.engn.device_budget_bytes is None
 
 
 def test_reset_telemetry_alias_is_consistent():
@@ -352,8 +352,8 @@ def test_reset_telemetry_alias_is_consistent():
                                      "tiled", "ring"])
 def test_prepared_plan_round_trip(backend):
     """Every prepare_* entry point returns a typed `PreparedPlan` whose
-    dict view still drives `apply`, and whose typed attributes agree
-    with the carrier's meta block."""
+    typed attributes agree with the carrier's meta block and which
+    drives `apply` directly; the removed dict view stays removed."""
     import jax
     import jax.numpy as jnp
     from repro.core.engn import prepare_graph
@@ -373,9 +373,12 @@ def test_prepared_plan_round_trip(backend):
     assert isinstance(plan, PreparedPlan)
     assert plan.backend == backend
     assert plan.n == 96
-    # dict view: same object the carrier holds, still apply-compatible
-    assert plan["backend"] == backend
+    # the MutableMapping view is gone: key access raises, the carrier
+    # and typed attributes are the supported surfaces
+    with pytest.raises(TypeError):
+        plan["backend"]
     assert plan.as_dict() is plan.carrier
+    assert plan.carrier["backend"] == backend
     if backend == "segment":
         assert plan.tile_format is None and plan.footprint_bytes == 0
     else:

@@ -137,9 +137,9 @@ def test_prepare_graph_budget_spills_and_raises():
     spill = EnGNConfig(in_dim=32, out_dim=16, backend="segment",
                        device_budget_bytes=30_000)
     gd = prepare_graph(g, spill)
-    assert gd["backend"] == "tiled"
+    assert gd.backend == "tiled"
     # the fitted streaming step respects the budget
-    meta = gd["tiled_meta"]
+    meta = gd.meta
     assert meta["tile"] <= 256 and meta["chunk"] >= 1
 
 
@@ -171,7 +171,7 @@ def test_enwiki_scale_runs_tiled_where_dense_fails():
         layer.cfg.device_budget_bytes = budget
     params = init_stack(layers, jax.random.key(0))
     gd = prepare_graph(gn, layers[0].cfg, out_dim=64)
-    assert gd["backend"] == "tiled"
+    assert gd.backend == "tiled"
     y = apply_stack(layers, params, gd, x)
     assert y.shape == (g.num_vertices, labels)
     assert np.isfinite(y).all()
@@ -212,18 +212,21 @@ def test_staged_models_spill_to_the_streamed_executor():
     gated.cfg.device_budget_bytes = 10_000     # force the spill
     params = gated.init(jax.random.key(0))
     gd = prepare_graph(g, gated.cfg)
-    assert gd["backend"] == "tiled"
+    assert gd.backend == "tiled"
     got = np.asarray(gated.apply(params, gd, x))
     seg = make_gnn("gated_gcn", 8, 4)
     want = np.asarray(seg.apply(params, prepare_graph(g, seg.cfg),
                                 jnp.asarray(x)))
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
+    from repro.core.engn import EnGNConfig
     from repro.serving.engine import GNNServingEngine, ServingConfig
     layers = [make_gnn("gated_gcn", 8, 4)]
     ps = [layers[0].init(jax.random.key(1))]
-    eng = GNNServingEngine(g, x, layers, ps,
-                           ServingConfig(device_budget_bytes=10_000))
+    eng = GNNServingEngine(
+        g, x, layers, ps,
+        ServingConfig(engn=EnGNConfig(in_dim=0, out_dim=0,
+                                      device_budget_bytes=10_000)))
     assert eng is not None
 
 
@@ -254,9 +257,10 @@ def test_serving_falls_back_to_tiled_instead_of_ooming():
     want = {r.rid: r.outputs for r in ref_eng.drain()}
 
     eng = GNNServingEngine(g, x, layers, params,
-                           ServingConfig(batch_size=8,
-                                         device_budget_bytes=50_000,
-                                         tiled_tile=32))
+                           ServingConfig(batch_size=8, tiled_tile=32,
+                                         engn=EnGNConfig(
+                                             in_dim=0, out_dim=0,
+                                             device_budget_bytes=50_000)))
     for i, ids in enumerate(reqs):
         eng.submit(i, ids)
     got = {r.rid: r.outputs for r in eng.drain()}

@@ -1,0 +1,399 @@
+"""Dynamic graphs (graphs/updates.py + update_plan, DESIGN.md C14):
+the insert/delete log's snapshot semantics, and the central property —
+every incremental merge (`update_tile_store` / `update_packed_store` /
+`TiledExecutor.apply_updates` / `update_plan`) is **bitwise** equal to
+a from-scratch rebuild of the epoch graph, across blocked / tiled /
+ring x dense / packed, including delete-to-empty tiles and
+relation-typed edges.  Integer weights and features make fp32 sums
+exact in any order, so "bitwise" is the honest bar, not a tolerance.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # clean checkout: vendored fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.engn import (EnGNConfig, EnGNLayer, prepare_graph,
+                             segment_aggregate, update_plan)
+from repro.core.tiled import TiledExecutor
+from repro.graphs.format import COOGraph
+from repro.graphs.generate import rmat_graph
+from repro.graphs.partition import build_tile_store, pack_tile_store
+from repro.graphs.updates import (UpdateLog, update_packed_store,
+                                  update_tile_store)
+from repro.serving.cache import DegreeAwareCache
+
+RING_SHARDS = min(len(jax.devices()), 8)
+
+
+# ---------------------------------------------------- fixtures
+def _int_graph(n, e, seed, relations=1):
+    """Deduplicated integer-weighted graph (optionally relation-typed):
+    small-int fp32 sums are exact in any reduction order, so every
+    incremental path must match a fresh build bit-for-bit."""
+    g = rmat_graph(n, e, seed=seed)
+    uniq = np.unique(np.stack([g.src, g.dst]), axis=1)
+    rng = np.random.default_rng(seed)
+    val = rng.integers(1, 4, uniq.shape[1]).astype(np.float32)
+    rel = (rng.integers(0, relations, uniq.shape[1]).astype(np.int32)
+           if relations > 1 else None)
+    return COOGraph(n, uniq[0].astype(np.int32), uniq[1].astype(np.int32),
+                    val, rel, relations)
+
+
+def _int_features(n, f, seed):
+    rng = np.random.default_rng(seed + 17)
+    return rng.integers(-3, 4, (n, f)).astype(np.float32)
+
+
+def _random_epoch(log, seed, n_del, n_ins, grow=0):
+    """Delete n_del random existing edges, insert n_ins random ones
+    (into [0, n + grow)), snapshot.  Typed logs draw relation ids."""
+    rng = np.random.default_rng(seed)
+    g = log.graph
+    r = g.num_relations
+    if n_del and g.num_edges:
+        pick = rng.choice(g.num_edges, min(n_del, g.num_edges),
+                          replace=False)
+        rel = g.rel[pick] if (r > 1 and g.rel is not None
+                              and seed % 2 == 0) else None
+        log.delete(g.src[pick], g.dst[pick], rel)
+    if n_ins:
+        hi = g.num_vertices + grow
+        log.insert(rng.integers(0, hi, n_ins),
+                   rng.integers(0, hi, n_ins),
+                   rng.integers(1, 4, n_ins).astype(np.float32),
+                   rng.integers(0, r, n_ins) if r > 1 else None)
+    return log.snapshot()
+
+
+def _assert_store_eq(a, b):
+    """Field-by-field bitwise equality of two (Edge|Packed)TileStores."""
+    assert type(a) is type(b)
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, np.ndarray) or isinstance(vb, np.ndarray):
+            assert va is not None and vb is not None, f.name
+            assert va.dtype == vb.dtype, f.name
+            assert np.array_equal(va, vb), f.name
+        else:
+            assert va == vb, f.name
+
+
+def _merged_stores(store, packed, snap):
+    new_store, delta = update_tile_store(store, snap.batch,
+                                         snap.graph.num_vertices)
+    new_packed = update_packed_store(packed, new_store, delta)
+    return new_store, new_packed, delta
+
+
+# ---------------------------------------------------- log semantics
+def test_log_delete_cancels_earlier_insert():
+    g = _int_graph(8, 10, 0)
+    log = UpdateLog(g)
+    log.insert(1, 2, 2.0)
+    log.delete(1, 2)          # kills the pending insert and any base edge
+    log.insert(1, 2, 3.0)     # logged after the delete: survives
+    snap = log.snapshot()
+    m = (snap.graph.src == 1) & (snap.graph.dst == 2)
+    assert m.sum() == 1 and snap.graph.weights()[m][0] == 3.0
+    assert log.epoch == 1 and log.pending == 0
+
+
+def test_log_multi_edge_delete_and_touched_sets():
+    src = np.array([0, 0, 3], np.int32)
+    dst = np.array([1, 1, 2], np.int32)   # multi-edge at (0, 1)
+    g = COOGraph(5, src, dst, np.array([1.0, 2.0, 3.0], np.float32))
+    log = UpdateLog(g)
+    log.delete(0, 1)
+    snap = log.snapshot()
+    assert snap.batch.num_deleted == 2        # both parallel edges die
+    assert snap.batch.del_src.shape == (1,)   # one unique coordinate
+    assert snap.graph.num_edges == 1
+    assert snap.touched_dst.tolist() == [1]
+    assert snap.touched_src.tolist() == [0]
+
+
+def test_log_vertex_growth_and_validation():
+    g = _int_graph(8, 10, 1)
+    log = UpdateLog(g)
+    log.insert(7, 12)                         # grows n to 13
+    assert log.snapshot().graph.num_vertices == 13
+    with pytest.raises(ValueError):
+        log.insert(-1, 0)
+    tg = _int_graph(8, 10, 1, relations=3)
+    tlog = UpdateLog(tg)
+    with pytest.raises(ValueError):
+        tlog.insert(0, 1, rel=3)
+
+
+def test_log_wildcard_delete_kills_all_relations():
+    g = COOGraph(4, np.array([0, 0, 1], np.int32),
+                 np.array([2, 2, 3], np.int32),
+                 np.ones(3, np.float32),
+                 np.array([0, 2, 1], np.int32), 3)
+    log = UpdateLog(g)
+    log.delete(0, 2)                          # rel=None: every relation
+    snap = log.snapshot()
+    assert snap.graph.num_edges == 1
+    assert snap.graph.rel.tolist() == [1]
+
+
+# ---------------------------------------------------- store merge parity
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(6, 120), e=st.integers(2, 500),
+       seed=st.integers(0, 5), tile=st.integers(4, 33),
+       relations=st.sampled_from([1, 1, 3]),
+       grow=st.sampled_from([0, 0, 9]))
+def test_property_store_merge_matches_rebuild(n, e, seed, tile,
+                                              relations, grow):
+    """Two epochs of random deletes + inserts (sometimes growing the
+    vertex set past a tile-grid boundary, sometimes relation-typed):
+    the merged EdgeTileStore and PackedTileStore must equal a fresh
+    build/pack of the epoch graph field-for-field, bitwise."""
+    g = _int_graph(n, e, seed, relations=relations)
+    log = UpdateLog(g)
+    store = build_tile_store(g, tile)
+    packed = pack_tile_store(store)
+    for ep in range(2):
+        snap = _random_epoch(log, seed + 11 * ep, n_del=e // 6 + 1,
+                             n_ins=e // 4 + 1, grow=grow)
+        store, packed, _ = _merged_stores(store, packed, snap)
+        _assert_store_eq(store, build_tile_store(snap.graph, tile))
+        _assert_store_eq(packed, pack_tile_store(build_tile_store(
+            snap.graph, tile)))
+
+
+def test_delete_to_empty_tiles_compact_away():
+    """Deleting every edge of a tile drops the tile from the store (the
+    tombstone-compaction contract), still bitwise vs a fresh build."""
+    # two far-apart tiles; kill everything in the second one
+    src = np.array([0, 1, 60, 61], np.int32)
+    dst = np.array([1, 0, 61, 60], np.int32)
+    g = COOGraph(64, src, dst, np.ones(4, np.float32))
+    store = build_tile_store(g, 8)
+    packed = pack_tile_store(store)
+    log = UpdateLog(g)
+    log.delete(np.array([60, 61]), np.array([61, 60]))
+    snap = log.snapshot()
+    new_store, new_packed, delta = _merged_stores(store, packed, snap)
+    assert delta.tiles_dropped >= 1
+    _assert_store_eq(new_store, build_tile_store(snap.graph, 8))
+    _assert_store_eq(new_packed, pack_tile_store(build_tile_store(
+        snap.graph, 8)))
+    # ...and delete-to-fully-empty still round-trips
+    log.delete(np.array([0, 1]), np.array([1, 0]))
+    snap2 = log.snapshot()
+    empty_store, empty_packed, _ = _merged_stores(new_store, new_packed,
+                                                  snap2)
+    assert empty_store.nnzb == 0 and empty_packed.val.size == 0
+    _assert_store_eq(empty_store, build_tile_store(snap2.graph, 8))
+
+
+def test_untouched_tiles_copy_bitwise_from_old_packed():
+    """The packed merge's copy path: tiles outside the delta must carry
+    over the *identical* entry bytes (same values, not just equal)."""
+    g = _int_graph(96, 400, 3)
+    store = build_tile_store(g, 16)
+    packed = pack_tile_store(store)
+    log = UpdateLog(g)
+    log.insert(0, 1, 2.0)                 # touches exactly one tile
+    snap = log.snapshot()
+    new_store, new_packed, delta = _merged_stores(store, packed, snap)
+    assert delta.touched_tiles.size < new_store.nnzb
+    _assert_store_eq(new_packed, pack_tile_store(new_store))
+
+
+# ---------------------------------------------------- executor parity
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(8, 110), e=st.integers(2, 450),
+       seed=st.integers(0, 4), tile=st.integers(5, 22),
+       fmt=st.sampled_from(["dense", "packed"]),
+       op=st.sampled_from(["sum", "max", "mean"]))
+def test_property_executor_apply_updates_parity(n, e, seed, tile, fmt, op):
+    """`TiledExecutor.apply_updates` over two epochs aggregates
+    bitwise-identically to a fresh executor on the final graph, in both
+    tile formats, and never rebuilds the store."""
+    g = _int_graph(n, e, seed)
+    ex = TiledExecutor(g, tile=tile, chunk=3, tile_format=fmt)
+    log = UpdateLog(g)
+    for ep in range(2):
+        snap = _random_epoch(log, seed + 7 * ep, n_del=e // 5 + 1,
+                             n_ins=e // 3 + 1, grow=(5 if ep else 0))
+        ex.apply_updates(snap)
+    assert ex.stats.store_builds == 1 and ex.stats.delta_merges == 2
+    x = _int_features(log.graph.num_vertices, 6, seed)
+    fresh = TiledExecutor(log.graph, tile=tile, chunk=3, tile_format=fmt)
+    got = np.asarray(ex.aggregate(x, op))
+    want = np.asarray(fresh.aggregate(x, op))
+    assert np.array_equal(got, want), (fmt, op, tile)
+
+
+# ---------------------------------------------------- plan-level parity
+@pytest.mark.parametrize("fmt", ["dense", "packed"])
+@pytest.mark.parametrize("backend", ["blocked", "tiled", "ring"])
+def test_update_plan_matches_fresh_prepare(backend, fmt):
+    """`update_plan` across the full backend x format matrix: the
+    re-priced plan aggregates bitwise like a from-scratch
+    `prepare_graph` of the epoch graph.  The tiled cell must take the
+    incremental path (store_builds stays 1); the others re-prepare."""
+    g = _int_graph(96, 420, 2)
+    cfg = EnGNConfig(in_dim=6, out_dim=6, backend=backend,
+                     tile=(4 if backend == "ring" else 16),
+                     tile_format=fmt,
+                     ring_shards=(RING_SHARDS if backend == "ring"
+                                  else None))
+    plan = prepare_graph(g, cfg)
+    log = UpdateLog(g)
+    for ep in range(2):
+        snap = _random_epoch(log, 31 + ep, n_del=60, n_ins=90,
+                             grow=(7 if ep else 0))
+        plan = update_plan(plan, snap, cfg)
+    if backend == "tiled":
+        st_ = plan.carrier["tiled_exec"].stats
+        assert st_.store_builds == 1 and st_.delta_merges == 2
+    assert plan.n == log.graph.num_vertices
+    x = _int_features(log.graph.num_vertices, 6, 2)
+    fresh = prepare_graph(log.graph, cfg)
+    if backend == "tiled":      # tiled runs its own executor, not _aggregate
+        # the budget gate re-priced for the grown store, not the stale one
+        for k in ("q", "host_bytes", "queue_plan",
+                  "resident_feature_bytes"):
+            assert plan.meta[k] == fresh.meta[k], k
+        got = np.asarray(plan.carrier["tiled_exec"].aggregate(x, "sum"))
+        want = np.asarray(fresh.carrier["tiled_exec"].aggregate(x, "sum"))
+    else:
+        layer = EnGNLayer(cfg)
+        got = np.asarray(layer._aggregate(plan, jnp.asarray(x)))
+        want = np.asarray(layer._aggregate(fresh, jnp.asarray(x)))
+    assert np.array_equal(got, want), (backend, fmt)
+
+
+def test_update_plan_spill_rebuilds_and_carries_counters():
+    """When the update-time dim outgrows the fitted step (here: the
+    plan was priced for inference, the update arrives under a training
+    config whose backward streams double the width), `update_plan`
+    re-prepares from scratch — tile re-fitted for the wider dim — and
+    the rebuild shows up in store_builds instead of silently resetting
+    the counters."""
+    g = _int_graph(64, 300, 4)
+    infer = EnGNConfig(in_dim=16, out_dim=16, backend="tiled", tile=32,
+                       tiled_chunk=2, device_budget_bytes=21_000)
+    plan = prepare_graph(g, infer)
+    assert plan.meta["tile"] == 32      # the step fits at the full tile
+    log = UpdateLog(g)
+    snap = _random_epoch(log, 5, n_del=20, n_ins=60)
+    train = dataclasses.replace(infer, training=True)
+    plan2 = update_plan(plan, snap, train)
+    st_ = plan2.carrier["tiled_exec"].stats
+    assert st_.store_builds >= 2, "expected a budget-forced rebuild"
+    assert plan2.meta["tile"] < 32      # re-fitted for the 2x-wide dim
+    assert plan2.n == log.graph.num_vertices
+    x = _int_features(log.graph.num_vertices, 16, 4)
+    want = np.asarray(prepare_graph(log.graph, train)
+                      .carrier["tiled_exec"].aggregate(x, "sum"))
+    got = np.asarray(plan2.carrier["tiled_exec"].aggregate(x, "sum"))
+    assert np.array_equal(got, want)
+
+
+def test_update_plan_mean_tracks_new_in_degrees():
+    """mean divides by in-counts; the merged store's counts must be the
+    epoch graph's, not the stale base's (exact small-int division)."""
+    g = _int_graph(40, 160, 6)
+    cfg = EnGNConfig(in_dim=5, out_dim=5, aggregate_op="mean",
+                     backend="tiled", tile=8)
+    plan = prepare_graph(g, cfg)
+    log = UpdateLog(g)
+    snap = _random_epoch(log, 9, n_del=30, n_ins=50)
+    plan = update_plan(plan, snap, cfg)
+    x = _int_features(log.graph.num_vertices, 5, 6)
+    ev = jnp.asarray(x)[jnp.asarray(log.graph.src)] \
+        * jnp.asarray(log.graph.weights())[:, None]
+    want = np.asarray(segment_aggregate(ev, jnp.asarray(log.graph.dst),
+                                        log.graph.num_vertices, "mean"))
+    got = np.asarray(plan.carrier["tiled_exec"].aggregate(x, "mean"))
+    assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------- cache maintenance
+def test_cache_invalidate_drops_rows_but_keeps_pins():
+    deg = np.arange(10)[::-1].astype(np.float32)   # vertex 0 hottest
+    c = DegreeAwareCache(capacity=6, degrees=deg, reserved_frac=0.5)
+    c.insert(np.arange(6), np.ones((6, 4), np.float32))
+    pinned_before = set(c.pinned_ids)
+    dropped = c.invalidate([0, 5, 9])       # 9 was never cached
+    assert dropped == 2
+    assert c.stats["invalidations"] == 2
+    assert set(c.pinned_ids) == pinned_before   # ids stay pinned
+    mask, _ = c.lookup(np.array([0, 5]))
+    assert not mask.any()                   # rows are gone...
+    c.insert(np.array([0]), np.zeros((1, 4), np.float32))
+    mask, _ = c.lookup(np.array([0]))
+    assert mask.all()                       # ...but refill re-pins
+
+
+def test_cache_pin_drift_and_repin():
+    deg = np.arange(8, dtype=np.float32)    # vertex 7 hottest
+    c = DegreeAwareCache(capacity=4, degrees=deg, reserved_frac=0.5)
+    assert c.pin_drift(deg) == 0.0
+    flipped = deg[::-1].copy()              # now vertex 0 hottest
+    assert c.pin_drift(flipped) == 1.0
+    c.insert(np.array([7, 0]), np.ones((2, 3), np.float32))
+    changed = c.repin(flipped)
+    assert changed == 4 and c.stats["repins"] == 1
+    assert set(c.pinned_ids) == {0, 1}
+    # old pin 7's row was demoted to LRU, new pin 0's was promoted
+    mask, _ = c.lookup(np.array([7, 0]))
+    assert mask.all()
+    assert 0 in c._pinned and 7 in c._lru
+
+
+# ---------------------------------------------------- serving parity
+def test_serving_engine_updates_match_cold_engine():
+    """After mid-traffic epochs the long-lived engine — surviving cache
+    rows included — answers bitwise like a cold engine on the final
+    graph (exact no-fanout extraction, the regime where cached rows are
+    reproducible)."""
+    from repro.core.models import init_stack, make_gnn_stack
+    from repro.serving import GNNServingEngine, ServingConfig
+
+    g = _int_graph(120, 700, 8)
+    x0 = _int_features(120, 6, 8)
+    layers = make_gnn_stack("gcn", [6, 8, 4])
+    params = init_stack(layers, jax.random.key(0))
+    cfg = ServingConfig(batch_size=32, num_hops=2, cache_capacity=64,
+                        warm_cache=False)
+    eng = GNNServingEngine(g, x0, layers, params, cfg)
+    rng = np.random.default_rng(8)
+    log = UpdateLog(g)
+    rid = 0
+    for ep in range(2):
+        for _ in range(3):                  # warm some cache rows
+            ids = rng.integers(0, log.graph.num_vertices, 20)
+            eng.submit(rid, ids.astype(np.int32))
+            eng.drain()
+            rid += 1
+        snap = _random_epoch(log, 13 + ep, n_del=25, n_ins=40,
+                             grow=(6 if ep else 0))
+        x_new = _int_features(snap.graph.num_vertices, 6, 8)
+        x_new[:x0.shape[0]] = x0
+        info = eng.apply_updates(snap, x_new=x_new)
+        assert info["invalidated"] >= 0 and info["affected"] > 0
+        x0 = x_new
+    assert eng.stats["updates_applied"] == 2
+    cold = GNNServingEngine(log.graph, x0, layers, params,
+                            ServingConfig(batch_size=32, num_hops=2,
+                                          warm_cache=False))
+    ids = np.unique(rng.integers(0, log.graph.num_vertices, 48)
+                    ).astype(np.int32)
+    eng.submit(rid, ids)
+    cold.submit(rid, ids)
+    got = np.asarray(eng.drain()[0].outputs)
+    want = np.asarray(cold.drain()[0].outputs)
+    assert np.array_equal(got, want)
